@@ -1,0 +1,57 @@
+"""Paper Fig. 19: cumulative technique breakdown (Naive -> +Greedy ->
++Prefetch -> +Cache) on Mixtral and Qwen, and Fig. 5: PCIe-traffic share
+vs HybriMoE."""
+from __future__ import annotations
+
+from benchmarks.common import Csv, SHORT, load_model
+from repro.core.simulator import FrameworkSpec, paper_frameworks, simulate
+
+
+def run(csv: Csv, bs: int = 8):
+    for arch in ("mixtral-8x7b", "qwen3-30b-a3b"):
+        bm = load_model(arch)
+        E = bm.cfg.moe.n_routed
+        ps = 1 if E <= 8 else 8
+        tr = bm.decode_trace(batch=bs, n_decode=24, seed=5)
+        pfs = bm.prefetchers()
+        cache = max(1, E // 4)          # paper Fig 19: cache ratio 25%
+        steps = [
+            FrameworkSpec("Naive", assignment="all_cpu"),
+            FrameworkSpec("+Greedy", assignment="greedy"),
+            FrameworkSpec("+Prefetch", assignment="greedy",
+                          prefetch="residual", prefetch_size=ps),
+            FrameworkSpec("+Cache", assignment="greedy",
+                          prefetch="residual", prefetch_size=ps,
+                          cache_policy="workload", cache_size=cache,
+                          w_size=4, u_size=8 if E >= 16 else 1),
+        ]
+        prev = None
+        base = None
+        for s in steps:
+            r = simulate(tr, bm.cfg, bm.cost, s, prefetchers=pfs,
+                         batch=bs, ctx_len=32)
+            base = base or r.tokens_per_s
+            inc = r.tokens_per_s / prev if prev else 1.0
+            prev = r.tokens_per_s
+            csv.add(f"fig19_breakdown/{SHORT[arch]}/{s.name}",
+                    r.step_time_s * 1e6,
+                    f"tok_s={r.tokens_per_s:.2f};cum_x{r.tokens_per_s/base:.2f};"
+                    f"inc_x{inc:.2f}")
+
+    # Fig 5: PCIe share, HybriMoE vs DALI
+    for arch in ("mixtral-8x7b", "deepseek-v2-lite-16b"):
+        bm = load_model(arch)
+        E = bm.cfg.moe.n_routed
+        tr = bm.decode_trace(batch=8, n_decode=24, seed=6)
+        pfs = bm.prefetchers()
+        for s in paper_frameworks(cache_size=E // 2):
+            if s.name not in ("HybriMoE", "DALI"):
+                continue
+            r = simulate(tr, bm.cfg, bm.cost, s, prefetchers=pfs, batch=8,
+                         ctx_len=32)
+            csv.add(f"fig5_pcie_share/{SHORT[arch]}/{s.name}", 0.0,
+                    f"pcie_frac={100*min(r.pcie_frac,1.0):.1f}%")
+
+
+if __name__ == "__main__":
+    run(Csv())

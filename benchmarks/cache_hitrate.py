@@ -1,0 +1,68 @@
+"""Paper Figs. 7 / 17b / 18d: cache hit rate of LRU vs HybriMoE score-based
+vs DALI workload-aware replacement, across cache sizes; plus the hit-rate-
+over-time curve (domain adaptation, Fig. 18d)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Csv, SHORT, load_model
+from repro.core.cache import LRUCache, ScoreCache, WorkloadAwareCache
+from repro.core.prefetch import top_workload_experts
+
+POLICIES = {"LRU": LRUCache, "HybriMoE": ScoreCache,
+            "DALI": WorkloadAwareCache}
+
+
+def hit_rate(trace, policy_cls, cache_size: int, top: int = 3,
+             seed: int = 0, timeline=False):
+    """Hit rate of the top-`top` highest-workload experts per step (the
+    experts an expert-wise hybrid framework wants on the GPU, Fig. 8)."""
+    L = trace.n_moe_layers
+    E = trace.workload[0][0].shape[0]
+    kw = dict(w_size=4, u_size=max(1, cache_size // 2)) \
+        if policy_cls is WorkloadAwareCache else {}
+    caches = [policy_cls(E, cache_size, seed=seed + l, **kw)
+              for l in range(L)]
+    hits = looks = 0
+    series = []
+    for t in range(trace.n_steps):
+        h = lk = 0
+        for l in range(L):
+            w = trace.workload[t][l]
+            for e in top_workload_experts(w, top):
+                if w[e] <= 0:
+                    continue
+                lk += 1
+                h += bool(caches[l].hit(int(e)))
+            caches[l].observe(w, trace.gates_sum[t][l])
+        hits += h
+        looks += lk
+        series.append(h / max(lk, 1))
+    return (hits / max(looks, 1), series) if timeline else \
+        hits / max(looks, 1)
+
+
+def run(csv: Csv, cache_sizes=(0.25, 0.5)):
+    for arch in ("deepseek-v2-lite-16b", "mixtral-8x7b"):
+        bm = load_model(arch)
+        E = bm.cfg.moe.n_routed
+        tr = bm.decode_trace(batch=4, n_decode=48)
+        for ratio in cache_sizes:
+            cs = max(1, int(E * ratio))
+            for name, cls in POLICIES.items():
+                hr = hit_rate(tr, cls, cs)
+                csv.add(f"fig7_hitrate/{SHORT[arch]}/cache{ratio}/{name}",
+                        0.0, f"hit={100*hr:.1f}%")
+    # Fig 18d: hit rate over generation (groups of 8 tokens)
+    bm = load_model("mixtral-8x7b")
+    tr = bm.decode_trace(batch=4, n_decode=64)
+    _, series = hit_rate(tr, WorkloadAwareCache,
+                         max(1, bm.cfg.moe.n_routed // 2), timeline=True)
+    for g in range(0, len(series), 8):
+        grp = np.mean(series[g:g + 8])
+        csv.add(f"fig18d_hit_timeline/Mixtral/tokens{g}-{g+8}", 0.0,
+                f"hit={100*grp:.1f}%")
+
+
+if __name__ == "__main__":
+    run(Csv())

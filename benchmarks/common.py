@@ -1,0 +1,134 @@
+"""Shared benchmark substrate.
+
+Benchmarks measure *real* routing behaviour: each evaluation model is a
+reduced same-family variant of one of the paper's models, briefly trained
+on the synthetic Markov corpus (so the residual stream and router develop
+the structure DALI exploits — random-init models route near-uniformly and
+show none of the paper's dynamics).  Trained params and traces are cached
+under reports/bench_cache/.
+
+Timing comes from the calibrated cost model (paper hardware profile);
+prefetch accuracy / cache hit rate / cosine similarity are measured
+quantities (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import restore, save
+from repro.configs import get_config, make_smoke
+from repro.core.cost_model import CostModel, LOCAL_PC
+from repro.core.prefetch import (FeaturePrefetcher, RandomPrefetcher,
+                                 ResidualPrefetcher, StatisticalPrefetcher)
+from repro.core.residual import calibrate_residuals
+from repro.core.tracing import capture_decode_trace, capture_prefill_trace, \
+    gate_weights
+from repro.data.pipeline import MarkovCorpus
+from repro.launch.train import train_loop
+from repro.models.model import init_model
+
+CACHE_DIR = os.path.normpath(os.path.join(
+    os.path.dirname(__file__), "..", "reports", "bench_cache"))
+
+# the paper's evaluation models (Table 3), reduced same-family
+BENCH_MODELS = ["mixtral-8x7b", "deepseek-v2-lite-16b", "qwen3-30b-a3b"]
+SHORT = {"mixtral-8x7b": "Mixtral", "deepseek-v2-lite-16b": "DeepSeek",
+         "qwen3-30b-a3b": "Qwen"}
+
+
+def bench_cfg(arch: str):
+    cfg = make_smoke(get_config(arch))
+    return cfg.replace(n_layers=max(cfg.n_layers, 4) if cfg.moe is None
+                       else (4 + (cfg.moe.first_dense or 0)))
+
+
+@dataclass
+class BenchModel:
+    arch: str
+    cfg: object
+    params: object
+    corpus: MarkovCorpus
+    res_vecs: List[np.ndarray]
+    gate_ws: List[np.ndarray]
+    cost: CostModel
+
+    def prefetchers(self, seed: int = 0) -> Dict[str, object]:
+        m = self.cfg.moe
+        L = len(self.gate_ws)
+        return {
+            "residual": ResidualPrefetcher(self.gate_ws, self.res_vecs, m),
+            "feature": FeaturePrefetcher(self.gate_ws, m),
+            "statistical": StatisticalPrefetcher(L, m.n_routed),
+            "random": RandomPrefetcher(m.n_routed, seed),
+        }
+
+    def prompts(self, batch: int, length: int, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        return jnp.asarray(np.stack(
+            [self.corpus.sample(rng, length) for _ in range(batch)]))
+
+    def decode_trace(self, batch: int, n_decode: int, prompt_len: int = 32,
+                     seed: int = 0):
+        return capture_decode_trace(
+            self.params, self.cfg, self.prompts(batch, prompt_len, seed),
+            n_decode=n_decode, greedy=False, seed=seed)
+
+    def prefill_trace(self, batch: int, seq: int, seed: int = 0):
+        return capture_prefill_trace(self.params, self.cfg,
+                                     self.prompts(batch, seq, seed))
+
+
+_MODELS: Dict[str, BenchModel] = {}
+
+
+def load_model(arch: str, train_steps: int = 150, seed: int = 0) -> BenchModel:
+    if arch in _MODELS:
+        return _MODELS[arch]
+    cfg = bench_cfg(arch)
+    corpus = MarkovCorpus(vocab=cfg.vocab, seed=seed)
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    ck = os.path.join(CACHE_DIR, f"{arch}.ckpt")
+    template = init_model(jax.random.PRNGKey(seed), cfg)
+    if os.path.exists(ck):
+        params = jax.tree.map(jnp.asarray, restore(ck, template))
+    else:
+        t0 = time.time()
+        params, _, hist = train_loop(cfg, train_steps, 8, 64, corpus=corpus,
+                                     seed=seed, log_every=50)
+        print(f"[common] trained {arch} ce {hist[0]:.2f}->{hist[-1]:.2f} "
+              f"in {time.time()-t0:.0f}s")
+        save(ck, params)
+    # calibration trace (Wikitext stand-in: held-out Markov samples)
+    calib = capture_decode_trace(params, cfg,
+                                 jnp.asarray(np.stack(
+                                     [corpus.sample(
+                                         np.random.default_rng(seed + 100 + i),
+                                         32) for i in range(8)])),
+                                 n_decode=24, greedy=False, seed=seed + 1)
+    res_vecs = calibrate_residuals([calib])
+    bm = BenchModel(arch=arch, cfg=cfg, params=params, corpus=corpus,
+                    res_vecs=res_vecs, gate_ws=gate_weights(params, cfg),
+                    cost=CostModel.for_config(get_config(arch), LOCAL_PC))
+    _MODELS[arch] = bm
+    return bm
+
+
+class Csv:
+    """Collector for the ``name,us_per_call,derived`` contract."""
+
+    def __init__(self):
+        self.rows: List[tuple] = []
+
+    def add(self, name: str, us_per_call: float, derived: str):
+        self.rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.2f},{derived}")
+
+    def extend(self, other: "Csv"):
+        self.rows.extend(other.rows)

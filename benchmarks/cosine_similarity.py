@@ -1,0 +1,33 @@
+"""Paper Table 8 + Appendix A.5: per-layer cosine similarity between the
+features used for next-layer prediction and the true next-layer gate
+inputs — raw (HybriMoE) vs residual-corrected (DALI)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Csv, SHORT, load_model
+from repro.core.residual import cosine_similarity
+
+
+def run(csv: Csv, bs: int = 8):
+    for arch in ("mixtral-8x7b", "qwen3-30b-a3b"):
+        bm = load_model(arch)
+        tr = bm.decode_trace(batch=bs, n_decode=16, seed=21)
+        L = tr.n_moe_layers
+        raw_all, cor_all = [], []
+        for l in range(L - 1):
+            raw, cor = [], []
+            for t in range(tr.n_steps):
+                h, hn = tr.gate_in[t][l], tr.gate_in[t][l + 1]
+                raw.append(cosine_similarity(h, hn))
+                cor.append(cosine_similarity(h + bm.res_vecs[l][None], hn))
+            raw_all.append(np.mean(raw))
+            cor_all.append(np.mean(cor))
+            csv.add(f"table8_cosine/{SHORT[arch]}/layer{l}", 0.0,
+                    f"HybriMoE={np.mean(raw):.3f};DALI={np.mean(cor):.3f}")
+        csv.add(f"table8_cosine/{SHORT[arch]}/average", 0.0,
+                f"HybriMoE={np.mean(raw_all):.3f};DALI={np.mean(cor_all):.3f}")
+
+
+if __name__ == "__main__":
+    run(Csv())

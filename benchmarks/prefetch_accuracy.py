@@ -1,0 +1,39 @@
+"""Paper Table 2 + Fig. 16b: accuracy of high-workload expert prediction —
+EdgeMoE (statistical), HybriMoE (raw feature), DALI (residual-corrected) —
+across batch sizes and top-k, measured on real routing traces."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BENCH_MODELS, SHORT, Csv, load_model
+from repro.core.prefetch import prefetch_accuracy, top_workload_experts
+
+
+def measure(bm, trace, pf, k: int) -> float:
+    accs = []
+    L = trace.n_moe_layers
+    for t in range(trace.n_steps):
+        for l in range(L - 1):
+            pred = pf.predict(l, trace.gate_in[t][l])
+            pf.observe(l, trace.workload[t][l])
+            accs.append(prefetch_accuracy(pred, trace.workload[t][l + 1], k))
+    return float(np.mean(accs))
+
+
+def run(csv: Csv, batches=(8, 16, 32), ks=(1, 2)):
+    for arch in ("deepseek-v2-lite-16b", "mixtral-8x7b"):
+        bm = load_model(arch)
+        for bs in batches:
+            tr = bm.decode_trace(batch=bs, n_decode=16, seed=bs)
+            for k in ks:
+                pfs = bm.prefetchers()
+                for label, key in (("EdgeMoE", "statistical"),
+                                   ("HybriMoE", "feature"),
+                                   ("DALI", "residual")):
+                    acc = measure(bm, tr, pfs[key], k)
+                    csv.add(f"table2_pfacc/{SHORT[arch]}/top{k}/bs{bs}/"
+                            f"{label}", 0.0, f"acc={100*acc:.1f}%")
+
+
+if __name__ == "__main__":
+    run(Csv())

@@ -1,0 +1,34 @@
+"""Paper Fig. 16a: decode speed with different prefetching strategies on
+Mixtral (Naive = greedy only / Random / HybriMoE feature / DALI residual),
+each prefetching two experts."""
+from __future__ import annotations
+
+from benchmarks.common import Csv, load_model
+from repro.core.simulator import FrameworkSpec, simulate
+
+
+def run(csv: Csv, bs: int = 8):
+    bm = load_model("mixtral-8x7b")
+    tr = bm.decode_trace(batch=bs, n_decode=24, seed=3)
+    pfs = bm.prefetchers()
+    specs = [
+        FrameworkSpec("Naive", assignment="greedy"),
+        FrameworkSpec("Random", assignment="greedy", prefetch="random",
+                      prefetch_size=2),
+        FrameworkSpec("HybriMoE", assignment="greedy", prefetch="feature",
+                      prefetch_size=2),
+        FrameworkSpec("DALI", assignment="greedy", prefetch="residual",
+                      prefetch_size=2),
+    ]
+    base = None
+    for s in specs:
+        r = simulate(tr, bm.cfg, bm.cost, s, prefetchers=pfs, batch=bs,
+                     ctx_len=32)
+        base = base or r.tokens_per_s
+        csv.add(f"fig16a_prefetch/Mixtral/{s.name}", r.step_time_s * 1e6,
+                f"tok_s={r.tokens_per_s:.2f};x{r.tokens_per_s/base:.2f};"
+                f"pfacc={100*r.prefetch_acc:.1f}%")
+
+
+if __name__ == "__main__":
+    run(Csv())

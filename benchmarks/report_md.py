@@ -1,0 +1,88 @@
+"""Render reports/dryrun/*.json into the EXPERIMENTS.md §Dry-run and
+§Roofline markdown tables.
+
+  PYTHONPATH=src python -m benchmarks.report_md > reports/roofline_tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from collections import defaultdict
+
+DRYRUN_DIR = os.path.normpath(os.path.join(
+    os.path.dirname(__file__), "..", "reports", "dryrun"))
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load():
+    recs = {}
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.2f}"
+
+
+def main():
+    recs = load()
+    archs = sorted({k[0] for k in recs})
+
+    print("### Dry-run status (arch x shape x mesh)\n")
+    print("| arch | shape | single-pod (16x16) | multi-pod (2x16x16) | "
+          "wmode | HBM/chip (GB) |")
+    print("|---|---|---|---|---|---|")
+    for a in archs:
+        for s in SHAPE_ORDER:
+            r1 = recs.get((a, s, "pod16x16"))
+            r2 = recs.get((a, s, "pod2x16x16"))
+            if r1 is None and r2 is None:
+                continue
+            st1 = r1["status"] if r1 else "—"
+            st2 = r2["status"] if r2 else "—"
+            wm = (r1 or r2).get("weight_mode", "—")
+            hbm = (f"{r1['memory']['peak_per_device_gb']:.2f}"
+                   if r1 and r1["status"] == "ok" else "—")
+            print(f"| {a} | {s} | {st1} | {st2} | {wm} | {hbm} |")
+
+    print("\n### Roofline terms (single-pod, 256 chips; seconds per step)\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "MODEL/HLO flops | notes |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a in archs:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, "pod16x16"))
+            if not r:
+                continue
+            if r["status"] == "skipped":
+                print(f"| {a} | {s} | — | — | — | skipped | — | "
+                      f"sub-quadratic rule |")
+                continue
+            if r["status"] != "ok":
+                print(f"| {a} | {s} | — | — | — | ERROR | — | |")
+                continue
+            rf = r["roofline"]
+            dom = rf["dominant"].replace("_s", "")
+            note = ""
+            if r["memory"]["peak_per_device_gb"] > 16:
+                note = f"over 16GB HBM ({r['memory']['peak_per_device_gb']:.0f}GB)"
+            print(f"| {a} | {s} | {fmt_ms(rf['compute_s'])}ms "
+                  f"| {fmt_ms(rf['memory_s'])}ms "
+                  f"| {fmt_ms(rf['collective_s'])}ms | **{dom}** "
+                  f"| {rf['useful_flops_ratio']:.2f} | {note} |")
+
+    # dominant-term stats
+    doms = defaultdict(int)
+    for (a, s, m), r in recs.items():
+        if m == "pod16x16" and r["status"] == "ok":
+            doms[r["roofline"]["dominant"]] += 1
+    print("\nDominant-term distribution (single-pod):",
+          dict(doms))
+
+
+if __name__ == "__main__":
+    main()

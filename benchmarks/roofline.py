@@ -1,0 +1,57 @@
+"""Roofline report (deliverable g): reads reports/dryrun/*.json produced by
+``python -m repro.launch.dryrun --all`` and emits the per-(arch x shape x
+mesh) three-term table with the dominant bottleneck."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Csv
+
+DRYRUN_DIR = os.path.normpath(os.path.join(
+    os.path.dirname(__file__), "..", "reports", "dryrun"))
+
+
+def load_records():
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def run(csv: Csv):
+    recs = load_records()
+    if not recs:
+        csv.add("roofline/missing", 0.0,
+                "run `python -m repro.launch.dryrun --all` first")
+        return
+    n_ok = n_skip = n_err = 0
+    for r in recs:
+        key = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] == "skipped":
+            n_skip += 1
+            csv.add(key, 0.0, "skipped")
+            continue
+        if r["status"] != "ok":
+            n_err += 1
+            csv.add(key, 0.0, "ERROR")
+            continue
+        n_ok += 1
+        rf = r["roofline"]
+        mem = r["memory"]
+        csv.add(key, rf["compute_s"] * 1e6,
+                f"dom={rf['dominant'].replace('_s','')};"
+                f"compute_ms={rf['compute_s']*1e3:.3f};"
+                f"memory_ms={rf['memory_s']*1e3:.3f};"
+                f"collective_ms={rf['collective_s']*1e3:.3f};"
+                f"useful={rf['useful_flops_ratio']:.2f};"
+                f"hbm_gb={mem['peak_per_device_gb']:.2f};"
+                f"wmode={r.get('weight_mode','?')}")
+    csv.add("roofline/summary", 0.0,
+            f"ok={n_ok};skipped={n_skip};errors={n_err}")
+
+
+if __name__ == "__main__":
+    run(Csv())

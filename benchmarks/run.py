@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure.  Prints
+``name,us_per_call,derived`` CSV rows (us_per_call = simulated/measured
+step time where meaningful, 0.0 for pure-ratio metrics).
+
+  PYTHONPATH=src python -m benchmarks.run [--only speed,prefetch,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (assignment_quality, breakdown, cache_hitrate,
+                        cosine_similarity, prefetch_accuracy, prefetch_speed,
+                        roofline, sensitivity, speed_vs_frameworks)
+from benchmarks.common import Csv
+
+SUITES = {
+    "speed": speed_vs_frameworks.run,         # Figs 12, 13
+    "prefetch_acc": prefetch_accuracy.run,    # Table 2, Fig 16b
+    "cache": cache_hitrate.run,               # Figs 7, 17b, 18d
+    "assignment": assignment_quality.run,     # Figs 14, 15, 20; Table 4
+    "prefetch_speed": prefetch_speed.run,     # Fig 16a
+    "sensitivity": sensitivity.run,           # Fig 18a-c, Table 9
+    "breakdown": breakdown.run,               # Figs 19, 5
+    "cosine": cosine_similarity.run,          # Table 8, App A.5
+    "roofline": roofline.run,                 # deliverable (g)
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    picks = args.only.split(",") if args.only else list(SUITES)
+    csv = Csv()
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in picks:
+        print(f"# === {name} ===", flush=True)
+        t1 = time.time()
+        SUITES[name](csv)
+        print(f"# {name} done in {time.time()-t1:.0f}s", flush=True)
+    print(f"# all suites done in {time.time()-t0:.0f}s "
+          f"({len(csv.rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Paper Fig. 18a-c + Table 9: sensitivity to prefetch size, cache size,
+and the (w_size, u_size) replacement parameters."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.cache_hitrate import hit_rate
+from benchmarks.common import Csv, SHORT, load_model
+from repro.core.cache import WorkloadAwareCache
+from repro.core.simulator import FrameworkSpec, simulate
+
+
+def run(csv: Csv, bs: int = 8):
+    bm = load_model("mixtral-8x7b")
+    E = bm.cfg.moe.n_routed
+    tr = bm.decode_trace(batch=bs, n_decode=24, seed=11)
+    pfs = bm.prefetchers()
+
+    # Fig 18a: prefetch size sweep
+    for ps in (1, 2, 3):
+        s = FrameworkSpec(f"PS{ps}", assignment="greedy",
+                          prefetch="residual", prefetch_size=ps,
+                          cache_policy="workload", cache_size=E // 4)
+        r = simulate(tr, bm.cfg, bm.cost, s, prefetchers=pfs, batch=bs,
+                     ctx_len=32)
+        csv.add(f"fig18a_prefetch_size/Mixtral/PS{ps}",
+                r.step_time_s * 1e6, f"tok_s={r.tokens_per_s:.2f}")
+
+    # Fig 18b: cached expert count sweep
+    for cs in range(1, E + 1, max(1, E // 4)):
+        s = FrameworkSpec(f"C{cs}", assignment="greedy",
+                          prefetch="residual", prefetch_size=1,
+                          cache_policy="workload", cache_size=cs)
+        r = simulate(tr, bm.cfg, bm.cost, s, prefetchers=pfs, batch=bs,
+                     ctx_len=32)
+        csv.add(f"fig18b_cache_size/Mixtral/C{cs}", r.step_time_s * 1e6,
+                f"tok_s={r.tokens_per_s:.2f};hit={100*r.cache_hit_rate:.1f}%")
+
+    # Fig 18c + Table 9: (w_size, u_size) grid — hit rate and speed
+    bm_d = load_model("deepseek-v2-lite-16b")
+    tr_d = bm_d.decode_trace(batch=bs, n_decode=32, seed=12)
+    E_d = bm_d.cfg.moe.n_routed
+    for w in (2, 4, 8):
+        for u in (1, max(1, E_d // 8), max(2, E_d // 4)):
+            hr = hit_rate_wu(tr_d, E_d, E_d // 2, w, u)
+            s = FrameworkSpec(f"w{w}u{u}", assignment="greedy",
+                              prefetch="residual", prefetch_size=1,
+                              cache_policy="workload", cache_size=E_d // 2,
+                              w_size=w, u_size=u)
+            r = simulate(tr_d, bm_d.cfg, bm_d.cost, s,
+                         prefetchers=bm_d.prefetchers(), batch=bs,
+                         ctx_len=32)
+            csv.add(f"fig18c_table9/DeepSeek/w{w}_u{u}",
+                    r.step_time_s * 1e6,
+                    f"hit={100*hr:.1f}%;tok_s={r.tokens_per_s:.2f}")
+
+
+def hit_rate_wu(trace, E, cache_size, w, u):
+    from repro.core.prefetch import top_workload_experts
+    L = trace.n_moe_layers
+    caches = [WorkloadAwareCache(E, cache_size, w_size=w, u_size=u, seed=l)
+              for l in range(L)]
+    hits = looks = 0
+    for t in range(trace.n_steps):
+        for l in range(L):
+            wl = trace.workload[t][l]
+            for e in top_workload_experts(wl, 3):
+                if wl[e] > 0:
+                    looks += 1
+                    hits += bool(caches[l].hit(int(e)))
+            caches[l].observe(wl)
+    return hits / max(looks, 1)
+
+
+if __name__ == "__main__":
+    run(Csv())

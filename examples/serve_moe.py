@@ -1,0 +1,15 @@
+"""End-to-end driver (the paper's regime): serve a small MoE with batched
+requests through the wave scheduler, DALI engine on, telemetry reported.
+
+  PYTHONPATH=src python examples/serve_moe.py [--arch deepseek-v2-lite-16b]
+
+Thin wrapper over repro.launch.serve with example defaults.
+"""
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--train-steps", "120", "--requests", "16",
+                "--max-new", "24"] + sys.argv[1:]
+    serve.main()

@@ -1,0 +1,89 @@
+"""Minimal dependency-free pytree checkpointer (msgpack + zstd).
+
+Stores any pytree of jnp/np arrays with dtype/shape metadata; restores to
+numpy (caller device_puts / reshards as needed).  Atomic writes via a temp
+file + rename; keeps the latest K checkpoints.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+
+def _pack_leaf(x):
+    a = np.asarray(x)
+    if a.dtype == np.dtype("bfloat16"):
+        return {"dt": "bfloat16", "sh": list(a.shape),
+                "b": a.view(np.uint16).tobytes()}
+    return {"dt": a.dtype.str, "sh": list(a.shape), "b": a.tobytes()}
+
+
+def _unpack_leaf(d):
+    if d["dt"] == "bfloat16":
+        import ml_dtypes  # bundled with jax
+        a = np.frombuffer(d["b"], np.uint16).view(ml_dtypes.bfloat16)
+    else:
+        a = np.frombuffer(d["b"], np.dtype(d["dt"]))
+    return a.reshape(d["sh"])
+
+
+def save(path: str, tree: Any) -> None:
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {"leaves": [_pack_leaf(x) for x in leaves],
+               "treedef": str(treedef)}
+    raw = msgpack.packb(payload, use_bin_type=True)
+    blob = zstd.ZstdCompressor(level=3).compress(raw)
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(blob)
+    os.replace(tmp, path)
+
+
+def restore(path: str, like: Any) -> Any:
+    with open(path, "rb") as f:
+        raw = zstd.ZstdDecompressor().decompress(f.read())
+    payload = msgpack.unpackb(raw, raw=False)
+    leaves = [_unpack_leaf(d) for d in payload["leaves"]]
+    _, treedef = jax.tree.flatten(like)
+    return treedef.unflatten(leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _paths(self):
+        pat = re.compile(r"^step_(\d+)\.ckpt$")
+        out = []
+        for f in os.listdir(self.dir):
+            m = pat.match(f)
+            if m:
+                out.append((int(m.group(1)), os.path.join(self.dir, f)))
+        return sorted(out)
+
+    def save(self, step: int, tree: Any) -> str:
+        path = os.path.join(self.dir, f"step_{step}.ckpt")
+        save(path, tree)
+        for _, old in self._paths()[:-self.keep]:
+            os.remove(old)
+        return path
+
+    def latest_step(self) -> Optional[int]:
+        ps = self._paths()
+        return ps[-1][0] if ps else None
+
+    def restore_latest(self, like: Any):
+        ps = self._paths()
+        if not ps:
+            return None, None
+        step, path = ps[-1]
+        return step, restore(path, like)

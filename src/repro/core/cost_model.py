@@ -1,0 +1,163 @@
+"""Cost model for heterogeneous expert execution (paper §4.1, Eq. 4-6).
+
+The paper obtains ``t_cpu(w)``, ``t_gpu(w)`` and ``trans_time`` by warm-up
+profiling on the target platform and reuses them for all later inference.
+We do the same: analytic profiles matching the paper's platform (EPYC 7532 +
+RTX 3090 + PCIe 4.0 x16) and a TPU-v5e host-offload profile are built in,
+and ``calibrate_cpu`` can re-fit the CPU line from real matmul timings on
+the current host (the only tier that physically exists in this container).
+
+All times are in seconds; workloads ``w`` are token counts per expert.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class HardwareProfile:
+    name: str
+    cpu_gflops: float          # effective CPU GEMM throughput (f32/bf16 mix)
+    cpu_dram_gbps: float       # host DRAM bandwidth (expert weights stream
+                               # from DRAM: small-w expert FFN is mem-bound)
+    gpu_gflops: float          # effective accelerator throughput
+    gpu_hbm_gbps: float        # accelerator memory bandwidth
+    link_gbps: float           # host->device link (PCIe / DMA)
+    cpu_overhead_s: float      # fixed per-expert launch overhead on CPU
+    gpu_overhead_s: float      # fixed per-expert launch overhead on GPU
+    link_latency_s: float      # per-transfer latency
+
+
+# Paper's platform: AMD EPYC 7532 (16 cores used) + RTX 3090 + PCIe4 x16.
+LOCAL_PC = HardwareProfile(
+    name="local-pc-3090",
+    cpu_gflops=250.0,          # 16 cores x ~16 GFLOP/s effective GEMM
+    cpu_dram_gbps=35.0,        # DDR4 8-ch, effective share of ~16 threads
+    gpu_gflops=25_000.0,       # RTX 3090 bf16 tensor-core, effective
+    gpu_hbm_gbps=800.0,        # of 936 peak
+    link_gbps=25.0,            # of 32 peak (PCIe 4.0 x16)
+    cpu_overhead_s=30e-6,
+    gpu_overhead_s=15e-6,
+    link_latency_s=20e-6,
+)
+
+# TPU-v5e single chip + host (the framework's deployment target).
+TPU_V5E_HOST = HardwareProfile(
+    name="tpu-v5e-host",
+    cpu_gflops=400.0,
+    cpu_dram_gbps=50.0,
+    gpu_gflops=197_000.0 * 0.6,   # 197 TFLOP/s bf16 peak, 60% effective
+    gpu_hbm_gbps=819.0,
+    link_gbps=25.0,               # host DMA, PCIe-class
+    cpu_overhead_s=30e-6,
+    gpu_overhead_s=10e-6,
+    link_latency_s=20e-6,
+)
+
+PROFILES = {p.name: p for p in (LOCAL_PC, TPU_V5E_HOST)}
+
+
+@dataclass
+class CostModel:
+    """Per-(model, hardware) cost tables for one MoE layer's experts."""
+
+    profile: HardwareProfile
+    d_model: int
+    d_expert: int
+    dtype_bytes: int = 2
+
+    # fitted CPU line overrides (from calibrate_cpu)
+    cpu_alpha: float | None = None
+    cpu_beta: float | None = None   # seconds per token
+
+    @classmethod
+    def for_config(cls, cfg: ModelConfig,
+                   profile: HardwareProfile = LOCAL_PC) -> "CostModel":
+        assert cfg.moe is not None, "cost model applies to MoE layers"
+        return cls(profile=profile, d_model=cfg.d_model,
+                   d_expert=cfg.moe.d_expert or cfg.d_ff,
+                   dtype_bytes=2 if "16" in cfg.param_dtype else 4)
+
+    # -- per-expert quantities --------------------------------------------
+    @property
+    def expert_bytes(self) -> float:
+        return 3 * self.d_model * self.d_expert * self.dtype_bytes
+
+    def expert_flops(self, w) -> np.ndarray:
+        return 6.0 * np.asarray(w, np.float64) * self.d_model * self.d_expert
+
+    @property
+    def trans_time(self) -> float:
+        """Eq. 6: constant PCIe/DMA time to move one expert's weights."""
+        return (self.profile.link_latency_s
+                + self.expert_bytes / (self.profile.link_gbps * 1e9))
+
+    def t_cpu(self, w) -> np.ndarray:
+        """Eq. 4 term: CPU execution time for workload w (0 if w == 0).
+        max(FLOP-bound, DRAM-weight-read-bound): at small w the CPU streams
+        the full expert weights from DRAM regardless of token count."""
+        w = np.asarray(w, np.float64)
+        if self.cpu_beta is not None:
+            t = self.cpu_alpha + self.cpu_beta * w
+        else:
+            t_flop = self.expert_flops(w) / (self.profile.cpu_gflops * 1e9)
+            t_mem = self.expert_bytes / (self.profile.cpu_dram_gbps * 1e9)
+            t = self.profile.cpu_overhead_s + np.maximum(t_flop, t_mem)
+        return np.where(w > 0, t, 0.0)
+
+    def t_gpu_compute(self, w) -> np.ndarray:
+        """Accelerator compute: max of FLOP-bound and weight-read-bound."""
+        w = np.asarray(w, np.float64)
+        t_flop = self.expert_flops(w) / (self.profile.gpu_gflops * 1e9)
+        t_mem = self.expert_bytes / (self.profile.gpu_hbm_gbps * 1e9)
+        t = self.profile.gpu_overhead_s + np.maximum(t_flop, t_mem)
+        return np.where(w > 0, t, 0.0)
+
+    def t_gpu(self, w, on_gpu) -> np.ndarray:
+        """Eq. 5 term: max(transfer-unless-resident, compute) (pipelined)."""
+        w = np.asarray(w, np.float64)
+        trans = np.where(np.asarray(on_gpu, bool), 0.0, self.trans_time)
+        t = np.maximum(trans, self.t_gpu_compute(w))
+        return np.where(w > 0, t, 0.0)
+
+    def break_even_workload(self, cached: bool = False) -> float:
+        """Smallest workload where GPU execution (incl. transfer unless
+        cached) beats CPU — the natural static threshold a Fiddler-style
+        policy would profile."""
+        for w in range(1, 1 << 16):
+            if self.t_gpu(w, cached) < self.t_cpu(w):
+                return float(w)
+        return float(1 << 16)
+
+    # -- warm-up profiling (paper §4.1: "obtained through warm-up
+    #    profiling before execution") -------------------------------------
+    def calibrate_cpu(self, workloads=(1, 4, 16, 64), repeats: int = 3):
+        """Fit t_cpu(w) = alpha + beta*w from real matmuls on this host."""
+        import jax
+        import jax.numpy as jnp
+        d, f = self.d_model, self.d_expert
+        wg = jnp.ones((d, f), jnp.float32)
+        wd = jnp.ones((f, d), jnp.float32)
+
+        @jax.jit
+        def ffn(x):
+            return (jax.nn.silu(x @ wg) * (x @ wg)) @ wd
+
+        ts = []
+        for w in workloads:
+            x = jnp.ones((w, d), jnp.float32)
+            ffn(x).block_until_ready()
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                ffn(x).block_until_ready()
+            ts.append((time.perf_counter() - t0) / repeats)
+        A = np.stack([np.ones(len(workloads)), np.asarray(workloads)], 1)
+        (alpha, beta), *_ = np.linalg.lstsq(A, np.asarray(ts), rcond=None)
+        return dataclasses.replace(self, cpu_alpha=float(max(alpha, 1e-6)),
+                                   cpu_beta=float(max(beta, 1e-9)))

@@ -1,0 +1,184 @@
+"""In-graph DALI engine: the paper's Fig. 9 control loop as pure JAX.
+
+Per serve step, after the model forward has produced per-MoE-layer routing
+observables (workloads, gate inputs — see ``apply_model(trace=True)``), this
+module runs, entirely under jit:
+
+  1. Greedy Assignment (Alg. 1) per layer — lax.scan over the sorted
+     |t_gpu - t_cpu| order (vmapped over layers),
+  2. Residual-Based Prefetching (Eq. 10) — layer l's gate applied to layer
+     l-1's residual-corrected features,
+  3. Workload-Aware Cache Replacement (Alg. 2) — windowed score
+     accumulation with u_size swaps, as functional state updates.
+
+The *decisions* are bit-exact with the host/numpy implementations (tested);
+device-side numerics are unchanged (all activated experts compute on the
+accelerator in this container — the CPU tier exists in the timing model,
+see DESIGN.md §2).  Outputs include per-layer T_cpu/T_gpu estimates, link
+bytes and cache hits so the serve loop can report scheduling telemetry.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.assignment import greedy_assign_jnp
+from repro.core.cost_model import CostModel
+
+
+@dataclass(frozen=True)
+class DaliConfig:
+    n_moe_layers: int
+    n_experts: int
+    cache_size: int
+    prefetch_size: int = 1
+    w_size: int = 4
+    u_size: int = 1
+    # cost constants (seconds), baked from a CostModel
+    t_trans: float = 0.01
+    cpu_alpha: float = 30e-6
+    cpu_per_tok: float = 1e-4        # FLOP-bound slope
+    cpu_mem: float = 5e-3            # DRAM weight-read floor
+    gpu_alpha: float = 15e-6
+    gpu_per_tok: float = 1e-6
+    gpu_mem: float = 4e-4            # HBM weight-read floor
+
+    @classmethod
+    def from_cost_model(cls, cm: CostModel, n_moe_layers: int,
+                        n_experts: int, cache_size: int, **kw):
+        p = cm.profile
+        flops_tok = 6.0 * cm.d_model * cm.d_expert
+        return cls(
+            n_moe_layers=n_moe_layers, n_experts=n_experts,
+            cache_size=cache_size,
+            t_trans=cm.trans_time,
+            cpu_alpha=p.cpu_overhead_s,
+            cpu_per_tok=flops_tok / (p.cpu_gflops * 1e9),
+            cpu_mem=cm.expert_bytes / (p.cpu_dram_gbps * 1e9),
+            gpu_alpha=p.gpu_overhead_s,
+            gpu_per_tok=flops_tok / (p.gpu_gflops * 1e9),
+            gpu_mem=cm.expert_bytes / (p.gpu_hbm_gbps * 1e9),
+            **kw)
+
+
+def init_dali_state(dcfg: DaliConfig, key=None):
+    """resident: (L, E) bool — paper: cache seeded with random experts."""
+    L, E, C = dcfg.n_moe_layers, dcfg.n_experts, dcfg.cache_size
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    order = jax.vmap(lambda k: jax.random.permutation(k, E))(
+        jax.random.split(key, L))
+    resident = order < C          # C random residents per layer
+    return {
+        "resident": resident,
+        "scores": jnp.zeros((L, E), jnp.float32),
+        "tick": jnp.zeros((), jnp.int32),
+    }
+
+
+def _t_cpu(w, dcfg: DaliConfig):
+    t = dcfg.cpu_alpha + jnp.maximum(w * dcfg.cpu_per_tok, dcfg.cpu_mem)
+    return jnp.where(w > 0, t, 0.0)
+
+
+def _t_gpu(w, resident, dcfg: DaliConfig):
+    comp = dcfg.gpu_alpha + jnp.maximum(w * dcfg.gpu_per_tok, dcfg.gpu_mem)
+    trans = jnp.where(resident, 0.0, dcfg.t_trans)
+    return jnp.where(w > 0, jnp.maximum(trans, comp), 0.0)
+
+
+def predict_next_workload(gate_in_prev, res_vec_prev, router, top_k: int,
+                          router_type: str = "softmax_topk"):
+    """Eq. 10: workload prediction for THIS layer from the PREVIOUS layer's
+    residual-corrected gate input.  gate_in_prev (T,d), router (d,E)."""
+    h = gate_in_prev.astype(jnp.float32) + res_vec_prev[None, :]
+    logits = h @ router
+    if router_type == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    _, idx = jax.lax.top_k(scores, top_k)
+    E = router.shape[1]
+    return jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.int32), axis=(0, 1))
+
+
+def _cache_update(resident, scores, w, do_update, dcfg: DaliConfig):
+    """Alg. 2 for one layer: windowed swap of u_size experts (functional)."""
+    scores = scores + w.astype(jnp.float32)
+    NEG, POS = -1e30, 1e30
+    non_res_scores = jnp.where(resident, NEG, scores)
+    res_scores = jnp.where(resident, scores, POS)
+    inc_val, inc_idx = jax.lax.top_k(non_res_scores, dcfg.u_size)
+    out_val, out_idx = jax.lax.top_k(-res_scores, dcfg.u_size)
+    out_val = -out_val
+    # pair highest incoming with lowest outgoing; swap only on improvement
+    swap = (inc_val > out_val) & (inc_val > NEG / 2) & (out_val < POS / 2)
+    new_resident = resident
+    new_resident = new_resident.at[out_idx].set(
+        jnp.where(swap, False, new_resident[out_idx]))
+    new_resident = new_resident.at[inc_idx].set(
+        jnp.where(swap, True, new_resident[inc_idx]))
+    n_swaps = jnp.sum(swap.astype(jnp.int32))
+    resident = jnp.where(do_update, new_resident, resident)
+    scores = jnp.where(do_update, jnp.zeros_like(scores), scores)
+    n_swaps = jnp.where(do_update, n_swaps, 0)
+    return resident, scores, n_swaps
+
+
+def dali_schedule(state, workloads, gate_in, routers, res_vecs,
+                  dcfg: DaliConfig, top_k: int,
+                  router_type: str = "softmax_topk"):
+    """One serve step of DALI scheduling, fully jittable.
+
+    workloads (L, E) int32; gate_in (L, T, d); routers (L, d, E);
+    res_vecs (L, d) — res_vecs[l] corrects layer l's gate input to predict
+    layer l+1 (Eq. 11).  Returns (new_state, telemetry dict).
+    """
+    L, E = workloads.shape
+    w = workloads.astype(jnp.float32)
+
+    # --- Residual-Based Prefetching: predictions for layers 1..L-1 --------
+    def pf(l):
+        return predict_next_workload(gate_in[l - 1], res_vecs[l - 1],
+                                     routers[l], top_k, router_type)
+    pf_pred = jnp.stack([jnp.zeros((E,), jnp.int32)]
+                        + [pf(l) for l in range(1, L)])       # (L, E)
+    pf_rank = jnp.argsort(-pf_pred, axis=-1)
+    prefetched = jnp.zeros((L, E), bool)
+    cols = pf_rank[:, :dcfg.prefetch_size]
+    prefetched = prefetched.at[jnp.arange(L)[:, None], cols].set(True)
+    prefetched = prefetched.at[0].set(False)      # layer 0: nothing upstream
+
+    # --- Greedy Assignment (Alg. 1), vmapped over layers ------------------
+    resident_eff = state["resident"] | prefetched
+    tc = _t_cpu(w, dcfg)                                       # (L, E)
+    tg = _t_gpu(w, resident_eff, dcfg)
+    on_cpu, on_gpu, T_cpu, T_gpu = jax.vmap(greedy_assign_jnp)(tc, tg)
+
+    # --- Workload-Aware Cache Replacement (Alg. 2) ------------------------
+    tick = state["tick"] + 1
+    do_update = (tick % dcfg.w_size) == 0
+    resident_new, scores_new, n_swaps = jax.vmap(
+        lambda r, s, wl: _cache_update(r, s, wl, do_update, dcfg)
+    )(state["resident"], state["scores"], w)
+
+    new_state = {"resident": resident_new, "scores": scores_new,
+                 "tick": tick}
+    gpu_active = on_gpu & (workloads > 0)
+    hits = jnp.sum(gpu_active & resident_eff, axis=-1)
+    misses = jnp.sum(gpu_active & ~resident_eff, axis=-1)
+    link_s = (misses.astype(jnp.float32) * dcfg.t_trans
+              + n_swaps.astype(jnp.float32) * dcfg.t_trans
+              + jnp.sum(prefetched, -1).astype(jnp.float32) * dcfg.t_trans)
+    telemetry = {
+        "on_gpu": on_gpu, "on_cpu": on_cpu,
+        "T_cpu": T_cpu, "T_gpu": T_gpu,
+        "layer_time": jnp.maximum(T_cpu, T_gpu),
+        "hits": hits, "misses": misses, "swaps": n_swaps,
+        "prefetched": prefetched, "pf_pred": pf_pred,
+        "link_seconds": link_s,
+        "step_moe_time": jnp.sum(jnp.maximum(T_cpu, T_gpu)),
+    }
+    return new_state, telemetry

@@ -1,0 +1,132 @@
+"""Routing-trace capture: run a real model and record, per decode step and
+per MoE layer, the quantities DALI's scheduler/prefetcher/cache operate on.
+
+A ``RoutingTrace`` holds, for each step t and MoE layer l:
+  workload[t][l]  (E,)  int   — tokens routed to each expert (the batch's w_i)
+  gate_in[t][l]   (T,d) f32   — gate input features (prefetch evaluation)
+  gates[t][l]     (T,K) f32   — selected gate values
+  probs_sum[t][l] (E,)  f32   — summed router probabilities (HybriMoE score)
+
+Traces are captured from *real* forwards of (usually smoke-scale) models —
+prefetch accuracy / cache hit rate / load-balance numbers in the benchmarks
+are measured quantities, not simulations.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig, layer_pattern, scan_pattern
+from repro.models.model import apply_model, init_caches
+
+
+def moe_layer_indices(cfg: ModelConfig) -> List[int]:
+    return [i for i, (_, mlp) in enumerate(layer_pattern(cfg))
+            if mlp == "moe"]
+
+
+def flatten_moe_infos(infos, cfg: ModelConfig):
+    """Convert apply_model's infos into a flat per-MoE-layer list (layer
+    order), each a dict of numpy arrays."""
+    prefix_pat, period_pat, n_super = scan_pattern(cfg)
+    out = []
+    n_prefix = len(prefix_pat)
+    for i in range(n_prefix):
+        info = infos[i]
+        if info is not None:
+            out.append({k: np.asarray(v) for k, v in info.items()})
+    scan_infos = infos[n_prefix] if len(infos) > n_prefix else ()
+    per_pos = list(scan_infos)
+    for s in range(n_super):
+        for p, info in enumerate(per_pos):
+            if info is None:
+                continue
+            out.append({k: np.asarray(v[s]) for k, v in info.items()})
+    return out
+
+
+@dataclass
+class RoutingTrace:
+    cfg: ModelConfig
+    workload: List[List[np.ndarray]] = field(default_factory=list)
+    gate_in: List[List[np.ndarray]] = field(default_factory=list)
+    gates_sum: List[List[np.ndarray]] = field(default_factory=list)
+    n_tokens: int = 0
+
+    @property
+    def n_steps(self) -> int:
+        return len(self.workload)
+
+    @property
+    def n_moe_layers(self) -> int:
+        return len(self.workload[0]) if self.workload else 0
+
+    def append_step(self, flat_infos, n_tokens: int):
+        self.workload.append([f["workload"] for f in flat_infos])
+        self.gate_in.append([f["gate_in"].astype(np.float32)
+                             for f in flat_infos])
+        self.gates_sum.append([f["probs"].sum(0) for f in flat_infos])
+        self.n_tokens = n_tokens
+
+
+def gate_weights(params, cfg: ModelConfig) -> List[np.ndarray]:
+    """Router weight (d, E) per MoE layer, in layer order."""
+    prefix_pat, period_pat, n_super = scan_pattern(cfg)
+    out = []
+    for i, (_, mlp) in enumerate(prefix_pat):
+        if mlp == "moe":
+            out.append(np.asarray(params["prefix"][i]["mlp"]["router"]))
+    stacked = [np.asarray(params["scan"][p]["mlp"]["router"])
+               if mlp == "moe" else None
+               for p, (_, mlp) in enumerate(period_pat)]
+    for s in range(n_super):
+        for p, (_, mlp) in enumerate(period_pat):
+            if mlp == "moe":
+                out.append(stacked[p][s])
+    return out
+
+
+def capture_decode_trace(params, cfg: ModelConfig, prompt_tokens,
+                         n_decode: int, max_len: Optional[int] = None,
+                         greedy: bool = True, seed: int = 0) -> RoutingTrace:
+    """Prefill the prompt then decode ``n_decode`` tokens, recording routing
+    observables at every decode step (the regime the paper's cache/prefetch
+    operate in)."""
+    B, S = prompt_tokens.shape
+    max_len = max_len or (S + n_decode + 1)
+    caches = init_caches(cfg, B, max_len, dtype=cfg.dtype)
+
+    step = jax.jit(lambda p, t, pos, c: apply_model(
+        p, t, cfg, positions=pos, caches=c, trace=True))
+
+    trace = RoutingTrace(cfg)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    logits, caches, infos = step(params, prompt_tokens, pos, caches)
+    key = jax.random.PRNGKey(seed)
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    for t in range(n_decode):
+        pos = jnp.arange(S + t, S + t + 1, dtype=jnp.int32)
+        logits, caches, infos = step(params, tok, pos, caches)
+        flat = flatten_moe_infos(infos, cfg)
+        trace.append_step(flat, n_tokens=B)
+        if greedy:
+            tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        else:
+            key, sk = jax.random.split(key)
+            tok = jax.random.categorical(
+                sk, logits[:, -1], -1)[:, None].astype(jnp.int32)
+    return trace
+
+
+def capture_prefill_trace(params, cfg: ModelConfig, tokens) -> RoutingTrace:
+    """Single full-sequence forward (prefill phase workloads)."""
+    logits, _, infos = jax.jit(
+        lambda p, t: apply_model(p, t, cfg, trace=True))(params, tokens)
+    trace = RoutingTrace(cfg)
+    trace.append_step(flatten_moe_infos(infos, cfg),
+                      n_tokens=int(np.prod(tokens.shape)))
+    return trace

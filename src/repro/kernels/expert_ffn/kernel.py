@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: grouped (batched-per-expert) gated FFN.
+
+Computes, for every expert e:  y_e = act(x_e @ Wg_e) * (x_e @ Wu_e) @ Wd_e
+over capacity-bucketed token blocks x (E, C, d) — the compute hot spot of
+MoE offloading inference (paper §2.1/Fig. 2: the expert FFN is what gets
+scheduled between devices; on TPU it is the MXU-bound inner loop).
+
+Tiling: grid (E, C/bc, f/bf), f innermost so the (bc, d) f32 output block
+accumulates partial down-projections in VMEM across the f sweep:
+
+  x block     (bc, d)   — revisited across fi           ~ bc*d*2   bytes
+  Wg/Wu block (d, bf)   — streamed per (e, fi)          ~ d*bf*2*2
+  Wd block    (bf, d)   — streamed per (e, fi)          ~ bf*d*2
+  out block   (bc, d)   — f32 accumulator, revisited    ~ bc*d*4
+
+Block sizes default to MXU-friendly multiples of 128 and are clamped to
+the problem size.  All matmuls accumulate in f32
+(preferred_element_type), output cast to the input dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+
+
+def _kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, *, act, n_fi):
+    fi = pl.program_id(2)
+
+    @pl.when(fi == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[0]                                   # (bc, d)
+    wg = wg_ref[0]                                 # (d, bf)
+    wu = wu_ref[0]
+    wd = wd_ref[0]                                 # (bf, d)
+    h = _ACTS[act](jnp.dot(x, wg, preferred_element_type=jnp.float32))
+    h = h * jnp.dot(x, wu, preferred_element_type=jnp.float32)
+    o_ref[0] += jnp.dot(h.astype(wd.dtype), wd,
+                        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "block_c", "block_f",
+                                             "interpret"))
+def expert_ffn(xe, w_gate, w_up, w_down, act: str = "silu",
+               block_c: int = 128, block_f: int = 512,
+               interpret: bool = False):
+    """xe (E, C, d); w_gate/w_up (E, d, f); w_down (E, f, d) -> (E, C, d)."""
+    E, C, d = xe.shape
+    f = w_gate.shape[-1]
+    bc = min(block_c, C)
+    bf = min(block_f, f)
+    assert C % bc == 0 and f % bf == 0, (C, bc, f, bf)
+    grid = (E, C // bc, f // bf)
+
+    y = pl.pallas_call(
+        functools.partial(_kernel, act=act, n_fi=f // bf),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, d), lambda e, ci, fi: (e, ci, 0)),
+            pl.BlockSpec((1, d, bf), lambda e, ci, fi: (e, 0, fi)),
+            pl.BlockSpec((1, d, bf), lambda e, ci, fi: (e, 0, fi)),
+            pl.BlockSpec((1, bf, d), lambda e, ci, fi: (e, fi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, d), lambda e, ci, fi: (e, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, C, d), jnp.float32),
+        interpret=interpret,
+    )(xe, w_gate, w_up, w_down)
+    return y.astype(xe.dtype)

@@ -1,0 +1,18 @@
+"""Public op: grouped expert FFN — Pallas kernel on TPU, jnp oracle
+elsewhere (or interpret=True for kernel-path testing on CPU)."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import expert_ffn as expert_ffn_pallas
+from .ref import expert_ffn_ref
+
+
+def expert_ffn_op(xe, w_gate, w_up, w_down, act: str = "silu",
+                  force_kernel: bool = False, interpret: bool | None = None):
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu or force_kernel:
+        return expert_ffn_pallas(xe, w_gate, w_up, w_down, act=act,
+                                 interpret=(not on_tpu) if interpret is None
+                                 else interpret)
+    return expert_ffn_ref(xe, w_gate, w_up, w_down, act=act)

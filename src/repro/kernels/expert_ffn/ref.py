@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the grouped expert-FFN kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+
+
+def expert_ffn_ref(xe, w_gate, w_up, w_down, act: str = "silu"):
+    """xe (E, C, d); w_gate/w_up (E, d, f); w_down (E, f, d) -> (E, C, d).
+
+    Gated FFN per expert: down( act(x @ gate) * (x @ up) ).  Accumulation
+    in f32, output in xe.dtype (matches the kernel contract)."""
+    f32 = jnp.float32
+    h = _ACTS[act](jnp.einsum("ecd,edf->ecf", xe.astype(f32),
+                              w_gate.astype(f32)))
+    h = h * jnp.einsum("ecd,edf->ecf", xe.astype(f32), w_up.astype(f32))
+    y = jnp.einsum("ecf,efd->ecd", h, w_down.astype(f32))
+    return y.astype(xe.dtype)

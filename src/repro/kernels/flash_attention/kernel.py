@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: flash attention (GQA, causal, sliding-window,
+logit-softcap) with explicit VMEM tiling.
+
+Grid (B*Hkv, Sq/bq, Sk/bk), Sk innermost.  Online-softmax state (running
+max m, normaliser l, f32 accumulator) lives in VMEM scratch and is carried
+across the Sk sweep; the output block is written on the last Sk step.
+Fully-masked (q-block, k-block) pairs short-circuit via @pl.when on block
+indices (causal upper triangle and out-of-window blocks cost nothing).
+
+  q block (bq, G*D)  k/v block (bk, D)  acc (bq, G*D) f32
+
+Block defaults (bq=bk=128, multiples of the 128-lane MXU tile) keep the
+working set ~(2*bk*D + 2*bq*G*D)*4B — well under VMEM for D<=256, G<=16.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, window, softcap, bq, bk, n_kb, sq, sk, G):
+    kb = pl.program_id(2)
+    qb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = sk - sq + qb * bq            # absolute position of q row 0
+    k_start = kb * bk
+
+    # block-level skip: entire k-block after all q positions (causal) or
+    # before the window of all q positions
+    run = True
+    if causal:
+        run = k_start <= q_start + bq - 1
+    if window:
+        run = jnp.logical_and(run, k_start + bk - 1 > q_start - window) \
+            if not isinstance(run, bool) else (k_start + bk - 1 > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)            # (bq, G*D)
+        k = k_ref[0].astype(jnp.float32)            # (bk, D)
+        v = v_ref[0].astype(jnp.float32)            # (bk, D)
+        D = k.shape[-1]
+        qg = q.reshape(bq, G, D)
+        s = jax.lax.dot_general(qg, k, (((2,), (1,)), ((), ()))) * scale
+        # s: (bq, G, bk)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, G, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, G, bk), 2)
+        valid = jnp.ones((bq, G, bk), bool)
+        if causal:
+            valid &= k_pos <= q_pos
+        if window:
+            valid &= k_pos > q_pos - window
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_scr[...].reshape(bq, G)
+        l_prev = l_scr[...].reshape(bq, G)
+        acc_prev = acc_scr[...].reshape(bq, G, D)
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_prev * corr + p.sum(-1)
+        pv = jax.lax.dot_general(p, v, (((2,), (0,)), ((), ())))
+        acc_new = acc_prev * corr[..., None] + pv
+        m_scr[...] = m_new.reshape(m_scr.shape)
+        l_scr[...] = l_new.reshape(l_scr.shape)
+        acc_scr[...] = acc_new.reshape(acc_scr.shape)
+
+    @pl.when(kb == n_kb - 1)
+    def _finalize():
+        l = l_scr[...].reshape(bq, G, 1)
+        acc = acc_scr[...].reshape(bq, G, -1)
+        o_ref[0] = (acc / jnp.maximum(l, 1e-30)).reshape(
+            o_ref.shape[1:]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "scale", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q (B,Sq,Hq,D); k/v (B,Sk,Hkv,D) -> (B,Sq,Hq,D).  Queries align to
+    the suffix of the key sequence (standard prefill/extension layout)."""
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / float(np.sqrt(D))
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0
+
+    # layout: fold heads -> (B*Hkv, S, G*D) for q/o, (B*Hkv, S, D) for k/v
+    qh = q.reshape(B, Sq, Hkv, G * D).transpose(0, 2, 1, 3) \
+        .reshape(B * Hkv, Sq, G * D)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          softcap=softcap, bq=bq, bk=bk, n_kb=Sk // bk,
+                          sq=Sq, sk=Sk, G=G),
+        grid=(B * Hkv, Sq // bq, Sk // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, G * D), lambda h, qb, kb: (h, qb, 0)),
+            pl.BlockSpec((1, bk, D), lambda h, qb, kb: (h, kb, 0)),
+            pl.BlockSpec((1, bk, D), lambda h, qb, kb: (h, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, G * D), lambda h, qb, kb: (h, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, Sq, G * D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, G), jnp.float32),          # running max m
+            pltpu.VMEM((bq, G), jnp.float32),          # normaliser l
+            pltpu.VMEM((bq, G * D), jnp.float32),      # accumulator
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.reshape(B, Hkv, Sq, G, D).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, Sq, Hq, D)

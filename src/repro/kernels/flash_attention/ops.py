@@ -1,0 +1,23 @@
+"""Public op: flash attention — Pallas kernel on TPU, jnp oracle
+elsewhere.  The model's _mha_blockwise implements the same online-softmax
+recurrence for the non-TPU path."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_attention as flash_pallas
+from .ref import flash_attention_ref
+
+
+def flash_attention_op(q, k, v, *, causal: bool = True, window: int = 0,
+                       softcap: float = 0.0, scale: float | None = None,
+                       force_kernel: bool = False,
+                       interpret: bool | None = None):
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu or force_kernel:
+        return flash_pallas(q, k, v, causal=causal, window=window,
+                            softcap=softcap, scale=scale,
+                            interpret=(not on_tpu) if interpret is None
+                            else interpret)
+    return flash_attention_ref(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale)

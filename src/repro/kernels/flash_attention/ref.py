@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash-attention kernel (dense softmax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0, scale: float | None = None):
+    """q (B,Sq,Hq,D); k/v (B,Sk,Hkv,D); GQA via Hq % Hkv == 0.
+    Query i is aligned to key position Sk - Sq + i (decode-style suffix)."""
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    q_pos = jnp.arange(Sk - Sq, Sk)
+    k_pos = jnp.arange(Sk)
+    qg = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32)) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = jnp.ones((Sq, Sk), bool)
+    if causal:
+        valid &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        valid &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, D).astype(q.dtype)

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: fused MoE router (softmax + iterative top-k).
+
+One VMEM pass over a (bt, E) logit block produces gate values and expert
+indices: softmax (or sigmoid) is fused with k rounds of masked argmax, so
+the (T, E) probability matrix never round-trips through HBM.  E is small
+(8-128) so a whole expert row fits a VREG lane tile; the grid runs over
+token blocks only.
+
+  logits block (bt, E)   f32
+  gates  block (bt, k)   f32
+  idx    block (bt, k)   s32
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _kernel(lg_ref, gates_ref, idx_ref, *, top_k, router_type, renormalize):
+    x = lg_ref[...].astype(jnp.float32)               # (bt, E)
+    bt, E = x.shape
+    if router_type == "sigmoid":
+        probs = jax.nn.sigmoid(x)
+    elif router_type == "topk_softmax":
+        probs = x                                     # softmax after top-k
+    else:
+        m = jnp.max(x, -1, keepdims=True)
+        e = jnp.exp(x - m)
+        probs = e / jnp.sum(e, -1, keepdims=True)
+
+    work = probs
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bt, E), 1)
+    vals = []
+    idxs = []
+    for _ in range(top_k):
+        best = jnp.max(work, -1)                      # (bt,)
+        # first column achieving the max (ties -> lowest index)
+        is_best = work == best[:, None]
+        bidx = jnp.min(jnp.where(is_best, cols, E), -1).astype(jnp.int32)
+        vals.append(best)
+        idxs.append(bidx)
+        work = jnp.where(cols == bidx[:, None], NEG, work)
+    gates = jnp.stack(vals, -1)                       # (bt, k)
+    idx = jnp.stack(idxs, -1)
+    if router_type == "topk_softmax":
+        gm = jnp.max(gates, -1, keepdims=True)
+        ge = jnp.exp(gates - gm)
+        gates = ge / jnp.sum(ge, -1, keepdims=True)
+    elif router_type == "softmax_topk" and renormalize:
+        gates = gates / (jnp.sum(gates, -1, keepdims=True) + 1e-9)
+    gates_ref[...] = gates
+    idx_ref[...] = idx
+
+
+@functools.partial(jax.jit, static_argnames=("top_k", "router_type",
+                                             "renormalize", "block_t",
+                                             "interpret"))
+def gating(logits, top_k: int, router_type: str = "softmax_topk",
+           renormalize: bool = True, block_t: int = 256,
+           interpret: bool = False):
+    T, E = logits.shape
+    bt = min(block_t, T)
+    pad = (-T) % bt
+    if pad:
+        logits = jnp.pad(logits, ((0, pad), (0, 0)), constant_values=NEG)
+    Tp = T + pad
+    gates, idx = pl.pallas_call(
+        functools.partial(_kernel, top_k=top_k, router_type=router_type,
+                          renormalize=renormalize),
+        grid=(Tp // bt,),
+        in_specs=[pl.BlockSpec((bt, E), lambda t: (t, 0))],
+        out_specs=[pl.BlockSpec((bt, top_k), lambda t: (t, 0)),
+                   pl.BlockSpec((bt, top_k), lambda t: (t, 0))],
+        out_shape=[jax.ShapeDtypeStruct((Tp, top_k), jnp.float32),
+                   jax.ShapeDtypeStruct((Tp, top_k), jnp.int32)],
+        interpret=interpret,
+    )(logits)
+    return gates[:T], idx[:T]

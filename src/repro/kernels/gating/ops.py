@@ -1,0 +1,20 @@
+"""Public op: fused router — Pallas kernel on TPU, jnp oracle elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import gating as gating_pallas
+from .ref import gating_ref
+
+
+def gating_op(logits, top_k: int, router_type: str = "softmax_topk",
+              renormalize: bool = True, force_kernel: bool = False,
+              interpret: bool | None = None):
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu or force_kernel:
+        return gating_pallas(logits, top_k, router_type=router_type,
+                             renormalize=renormalize,
+                             interpret=(not on_tpu) if interpret is None
+                             else interpret)
+    return gating_ref(logits, top_k, router_type=router_type,
+                      renormalize=renormalize)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the fused router kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gating_ref(logits, top_k: int, router_type: str = "softmax_topk",
+               renormalize: bool = True):
+    """logits (T, E) f32 -> (gates (T,k) f32, idx (T,k) int32).
+
+    softmax_topk: softmax then top-k (optionally renormalised);
+    topk_softmax: top-k of logits then softmax over the k;
+    sigmoid:      per-expert sigmoid then top-k."""
+    if router_type == "sigmoid":
+        probs = jax.nn.sigmoid(logits)
+        gates, idx = jax.lax.top_k(probs, top_k)
+    elif router_type == "topk_softmax":
+        top_logits, idx = jax.lax.top_k(logits, top_k)
+        gates = jax.nn.softmax(top_logits, axis=-1)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, idx = jax.lax.top_k(probs, top_k)
+        if renormalize:
+            gates = gates / (jnp.sum(gates, -1, keepdims=True) + 1e-9)
+    if router_type == "softmax_topk" and not renormalize:
+        pass
+    return gates.astype(jnp.float32), idx.astype(jnp.int32)

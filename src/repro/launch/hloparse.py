@@ -1,0 +1,145 @@
+"""Post-SPMD HLO text analysis: collective link-traffic extraction with
+while-loop (lax.scan) trip-count multiplication.
+
+XLA cost analysis counts while bodies once; for the roofline's collective
+term we expand them: each ``while`` instruction's body contributes
+``trip_count x`` its collectives, where the trip count is recovered from
+the largest integer constant in the loop's condition computation (exact for
+lax.scan-generated loops).  Nested whiles multiply recursively.
+
+Traffic model per collective (bytes crossing links, per device):
+  all-gather          (g-1)/g x result_bytes
+  all-reduce          2 (g-1)/g x bytes
+  reduce-scatter      (g-1) x result_bytes      (operand = g x result)
+  all-to-all          (g-1)/g x bytes
+  collective-permute  bytes
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|f64|s64|c64|s16|"
+                       r"u16|u64)\[([0-9,]*)\]")
+_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "pred": 1, "f64": 8, "s64": 8, "c64": 8, "s16": 2,
+          "u16": 2, "u64": 8}
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def split_computations(hlo: str) -> Dict[str, str]:
+    """Map computation name -> body text (brace-balanced blocks)."""
+    comps = {}
+    i = 0
+    header = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)[^\n{]*\{", re.M)
+    for m in header.finditer(hlo):
+        name = m.group(1)
+        depth = 0
+        j = m.end() - 1
+        while j < len(hlo):
+            if hlo[j] == "{":
+                depth += 1
+            elif hlo[j] == "}":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        comps[name] = hlo[m.start():j + 1]
+    return comps
+
+
+_WHILE_RE = re.compile(
+    r"while\([^)]*\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"[su]32\[\]\s+constant\((\d+)\)")
+
+
+def trip_count(cond_text: str) -> int:
+    consts = [int(c) for c in _CONST_RE.findall(cond_text)]
+    return max(consts) if consts else 1
+
+
+def _line_collectives(text: str):
+    """Yield (kind, result_shape_bytes, group_size) for collectives in a
+    computation body (skips -done halves of async pairs)."""
+    for line in text.splitlines():
+        for kind in _COLL_KINDS:
+            token = f" {kind}("
+            token_start = f" {kind}-start("
+            if token in line or token_start in line:
+                m = re.search(r"=\s*(\([^)]*\)|[\w\[\],{}\s]*?)\s*" +
+                              kind.replace("-", r"\-") + r"(?:-start)?\(",
+                              line)
+                shape_str = m.group(1) if m else line.split("=")[0]
+                b = shape_bytes(shape_str)
+                gm = re.search(r"replica_groups=\{\{([0-9,]+)\}", line)
+                if gm:
+                    g = len(gm.group(1).split(","))
+                else:
+                    gm2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+                    g = int(gm2.group(2)) if gm2 else 2
+                yield kind, b, max(g, 2)
+                break
+
+
+def _traffic(kind: str, b: float, g: int) -> float:
+    if kind == "all-gather":
+        return b * (g - 1) / g
+    if kind == "all-reduce":
+        return 2.0 * b * (g - 1) / g
+    if kind == "reduce-scatter":
+        return b * (g - 1)
+    if kind == "all-to-all":
+        return b * (g - 1) / g
+    return float(b)   # collective-permute
+
+
+def collective_traffic(hlo: str) -> Dict[str, float]:
+    """Per-device collective traffic (bytes) by kind, scan-expanded."""
+    comps = split_computations(hlo)
+    entry = None
+    em = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+    if em:
+        entry = em.group(1)
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def walk(name: str) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        memo[name] = {}          # cycle guard
+        text = comps.get(name, "")
+        acc: Dict[str, float] = {}
+        for kind, b, g in _line_collectives(text):
+            acc[kind] = acc.get(kind, 0.0) + _traffic(kind, b, g)
+            acc["_n_" + kind] = acc.get("_n_" + kind, 0) + 1
+        for wm in _WHILE_RE.finditer(text):
+            cond, body = wm.group(1), wm.group(2)
+            n = trip_count(comps.get(cond, ""))
+            sub = walk(body)
+            for k, v in sub.items():
+                acc[k] = acc.get(k, 0.0) + v * n
+        # calls / fusions that might contain collectives
+        for cm in re.finditer(r"(?:call|fusion)\([^)]*\).*?"
+                              r"(?:to_apply|calls)=%?([\w.\-]+)", text):
+            sub = walk(cm.group(1))
+            for k, v in sub.items():
+                acc[k] = acc.get(k, 0.0) + v
+        memo[name] = acc
+        return acc
+
+    result = walk(entry) if entry else {}
+    result["total"] = sum(v for k, v in result.items()
+                          if not k.startswith("_n_"))
+    return result

@@ -1,0 +1,291 @@
+"""Logical-axis sharding (MaxText-style named rules) + parameter/cache
+PartitionSpec derivation.
+
+Model code annotates key intermediates via ``hint(x, *logical_names)``;
+``rules(...)`` context-manager activates a mesh + logical->mesh-axis map.
+Outside a rules context every hint is a no-op (tests, single-device runs).
+
+Parameter specs are derived from the params pytree by key-path pattern
+matching (pure dict pytrees make this robust), with two weight modes:
+  * tp    — tensor parallel over 'model' only, replicated over data/pod
+  * fsdp  — additionally shard the non-'model' matrix dim over 'data'
+            (needed when the TP-sharded weights alone exceed HBM, e.g.
+            llama3-405b / jamba-398b / llama4-400b)
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig, scan_pattern
+
+# --------------------------------------------------------------------------
+# logical-axis hints
+# --------------------------------------------------------------------------
+
+_ACTIVE: dict = {"mesh": None, "map": None, "wmode": "tp"}
+
+
+@contextlib.contextmanager
+def rules(mesh: Mesh, logical_map: Dict[str, object], wmode: str = "tp"):
+    prev = dict(_ACTIVE)
+    _ACTIVE["mesh"] = mesh
+    _ACTIVE["map"] = logical_map
+    _ACTIVE["wmode"] = wmode
+    try:
+        yield
+    finally:
+        _ACTIVE.update(prev)
+
+
+def active():
+    return _ACTIVE
+
+
+def _axsize(mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, (tuple, list)):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[ax]
+
+
+def fit_spec(spec: P, shape, mesh) -> P:
+    """Drop spec axes that do not evenly divide the dimension size, and
+    deduplicate mesh axes (first dimension keeps the axis)."""
+    out = []
+    used = set()
+    for i, ax in enumerate(spec):
+        keep = None
+        if ax is not None and i < len(shape) \
+                and shape[i] % _axsize(mesh, ax) == 0:
+            axes = ax if isinstance(ax, (tuple, list)) else (ax,)
+            if not any(a in used for a in axes):
+                used.update(axes)
+                keep = ax
+        out.append(keep)
+    return P(*out)
+
+
+def hint(x, *names):
+    """Constrain x's sharding by logical dim names (no-op w/o active rules).
+    Non-dividing axes are dropped silently (shape-aware)."""
+    mesh, lmap = _ACTIVE["mesh"], _ACTIVE["map"]
+    if mesh is None or lmap is None:
+        return x
+    spec = fit_spec(P(*[lmap.get(n) for n in names]), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def logical_map_for(cfg: ModelConfig, shape_name: str, mesh) -> Dict[str, object]:
+    """Logical-name -> mesh-axis map per input shape regime."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    m = {
+        "batch": dp, "seq": None, "res_seq": None, "embed": None,
+        "tokens": dp,            # flattened (batch*seq) token dim (MoE)
+        "expert_ffn": None,      # expert hidden dim (TP'd for small E)
+        "vocab": "model",
+        "heads": "model", "kv_heads": None, "head_dim": None,
+        "ffn": "model", "experts": "model", "cap": "data",
+        "mamba_heads": "model", "state": None,
+        "kv_seq": None, "frames": None,
+    }
+    if shape_name == "train_4k":
+        # sequence parallelism: the residual stream between blocks is
+        # sequence-sharded over 'model' (Megatron-SP style); attention /
+        # FFN internally all-gather as needed.
+        m["res_seq"] = "model"
+        dpt = (dp if isinstance(dp, tuple) else (dp,)) if dp else ()
+        m["tokens"] = tuple(dpt) + ("model",)
+    if shape_name == "long_500k":
+        # batch=1: shard the KV/sequence dim over 'data' instead
+        m["batch"] = None
+        m["kv_seq"] = "data"
+        m["seq"] = None
+    elif shape_name in ("decode_32k", "prefill_32k"):
+        m["kv_seq"] = "model"
+    if shape_name in ("decode_32k", "long_500k"):
+        # decode: keep the expert hidden dim 'data'-sharded so FSDP expert
+        # weights stay stationary (traffic = small activations + one
+        # reduce-scatter, not a full weight all-gather per step)
+        m["expert_ffn"] = "data"
+    return m
+
+
+# --------------------------------------------------------------------------
+# parameter specs
+# --------------------------------------------------------------------------
+
+_COL = re.compile(   # (in, out-sharded-over-model) matrices
+    r"(wq|wk|wv|up|gate|wuk|wuv|wz|wx|head)$")
+_ROW = re.compile(   # (in-sharded-over-model, out) matrices
+    r"(wo|down|out_proj)$")
+_REPL = re.compile(
+    r"(router|w|q_norm|k_norm|ckv_norm|wdkv|wdq|wB|wC|wdt|conv_B|conv_C|"
+    r"conv_bB|conv_bC|dt_bias|A_log|D|mlp_gate)$")
+
+
+def _key_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def param_pspecs(cfg: ModelConfig, params, mode: str = "tp", mesh=None):
+    """PartitionSpec pytree for the params.  mode in {tp, fsdp}."""
+    fs = "data" if mode == "fsdp" else None
+    E = cfg.moe.n_routed if cfg.moe is not None else 0
+    ep = E >= 16 and E % 16 == 0       # expert-parallel if divisible
+
+    def spec_for(path, leaf):
+        ks = _key_str(path)
+        nd = leaf.ndim
+        stacked = ("scan/" in ks or ks.startswith("scan")) and nd >= 1
+        lead = (None,) if stacked else ()
+        name = ks.split("/")[-1]
+        is_expert = nd - len(lead) == 3 and re.search(r"(gate|up|down)$", name)
+
+        if is_expert:                               # (E, a, b)
+            if re.search(r"down$", name):
+                sp = ("model", fs, None) if ep else (None, "model", fs)
+            else:                                   # gate/up: (E, d, f)
+                sp = ("model", None, fs) if ep else (None, fs, "model")
+            spec = P(*lead, *sp)
+        elif name == "tok":                         # embedding (V, d)
+            spec = P(*lead, "model", fs)
+        elif _ROW.search(name) and nd - len(lead) == 2:
+            spec = P(*lead, "model", fs)
+        elif _COL.search(name) and nd - len(lead) == 2:
+            spec = P(*lead, fs, "model")
+        elif name == "conv_x":                      # (K, d_inner)
+            spec = P(*lead, None, "model")
+        elif name in ("conv_bx", "norm_w") and nd - len(lead) == 1 \
+                and cfg.mamba is not None:
+            spec = P(*lead, "model")
+        else:
+            spec = P(*lead, *([None] * (nd - len(lead))))
+        m_ = mesh or _ACTIVE["mesh"]
+        if m_ is not None:
+            spec = fit_spec(spec, leaf.shape, m_)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def weights_need_fsdp(cfg: ModelConfig, mesh, train: bool = False) -> bool:
+    """Do TP-only weights exceed ~60% of one chip's HBM (16 GB v5e)?
+    Training counts optimizer state: bf16 params+grads + f32 mu/nu
+    ~ 12 bytes/param vs 2 for inference."""
+    n_params = estimate_params(cfg)
+    bytes_per = (2 if "16" in cfg.param_dtype else 4)
+    if train:
+        bytes_per = bytes_per * 2 + 8              # +grads, +f32 moments
+    tp_bytes = n_params * bytes_per / 16           # 'model' axis size
+    return tp_bytes > 0.6 * 16e9
+
+
+def estimate_params(cfg: ModelConfig) -> float:
+    from repro.models.config import layer_pattern
+    d = cfg.d_model
+    total = cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
+    for mixer, mlp in layer_pattern(cfg):
+        if mixer == "mamba":
+            mb = cfg.mamba
+            din = mb.d_inner(d)
+            total += 2 * d * din + din * d + 2 * d * mb.n_groups * mb.d_state
+        elif mixer in ("attn", "attn_local", "attn_global", "cross",
+                       "self_cross"):
+            a = cfg.attn
+            hd = cfg.head_dim()
+            if a.mla is not None:
+                ml = a.mla
+                total += d * a.n_heads * (ml.qk_nope_head_dim + ml.qk_rope_head_dim)
+                total += d * (ml.kv_lora_rank + ml.qk_rope_head_dim)
+                total += ml.kv_lora_rank * a.n_heads * (ml.qk_nope_head_dim
+                                                        + ml.v_head_dim)
+                total += a.n_heads * ml.v_head_dim * d
+            else:
+                nkv = a.n_kv_heads
+                total += d * hd * (2 * a.n_heads + 2 * nkv)
+            if mixer == "self_cross":
+                total += d * hd * 4 * a.n_heads
+        if mlp == "dense":
+            total += d * cfg.d_ff * (3 if cfg.glu else 2)
+        elif mlp == "moe":
+            m = cfg.moe
+            de = m.d_expert or cfg.d_ff
+            total += m.n_routed * 3 * d * de + d * m.n_routed
+            if m.n_shared:
+                total += 3 * d * (m.d_shared or m.n_shared * de)
+    if cfg.encoder is not None:
+        a = cfg.attn
+        hd = cfg.head_dim()
+        per = d * hd * 4 * a.n_heads + d * cfg.d_ff * (3 if cfg.glu else 2)
+        total += cfg.encoder.n_layers * per
+    return float(total)
+
+
+# --------------------------------------------------------------------------
+# cache / state specs
+# --------------------------------------------------------------------------
+
+def cache_pspecs(cfg: ModelConfig, caches, shape_name: str, mesh):
+    """PartitionSpecs for the serve-state cache pytree."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    lm = logical_map_for(cfg, shape_name, mesh)
+    batch_ax = lm["batch"]
+    seq_ax = lm["kv_seq"]
+
+    def spec_for(path, leaf):
+        ks = _key_str(path)
+        nd = leaf.ndim
+        stacked = "scan" in ks.split("/")
+        lead = (None,) if stacked else ()
+        name = ks.split("/")[-1]
+        body = nd - len(lead)
+        if name in ("k", "v", "xk", "xv"):          # (B, S, Hkv, hd)
+            return P(*lead, batch_ax, seq_ax if name in ("k", "v") else None,
+                     None, None)
+        if name in ("ckv", "kpe"):                  # (B, S, R)
+            return P(*lead, batch_ax, seq_ax, None)
+        if name == "pos":
+            return P(*lead, seq_ax)
+        if name == "ssm":                           # (B, H, P, N)
+            return P(*lead, batch_ax, "model", None, None)
+        if name in ("conv_x",):                     # (B, K-1, d_inner)
+            return P(*lead, batch_ax, None, "model")
+        if name in ("conv_B", "conv_C"):
+            return P(*lead, batch_ax, None, None)
+        return P(*lead, *([None] * body))
+
+    def fitted(path, leaf):
+        return fit_spec(spec_for(path, leaf), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(fitted, caches)
+
+
+def batch_pspec(mesh, batch: int):
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    total = 1
+    for a in dp:
+        total *= mesh.shape[a]
+    if batch % total == 0:
+        return P(dp if len(dp) > 1 else dp[0], None)
+    # try data-only
+    if "data" in mesh.axis_names and batch % mesh.shape["data"] == 0:
+        return P("data", None)
+    return P(None, None)

@@ -1,0 +1,82 @@
+"""Validation of the analytic roofline cost model (launch/costs.py) against
+XLA's compiled cost analysis.
+
+XLA counts scan bodies once, so the comparison uses 1-super-block variants
+(n_layers = one pattern period): the scan executes its body exactly once
+and ``cost_analysis()['flops']`` is directly comparable to the closed-form
+``step_cost``.  Run on a single device (no partitioning effects):
+
+  PYTHONPATH=src python -m repro.launch.validate_costs
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.launch.costs import step_cost
+from repro.models.config import scan_pattern
+from repro.models.model import apply_model, init_caches, init_model
+
+
+def validate(arch: str, kind: str = "prefill", batch: int = 2,
+             seq: int = 128):
+    cfg = get_config(arch)
+    prefix, period, _ = scan_pattern(cfg)
+    cfg = cfg.replace(n_layers=len(prefix) + len(period))
+    if cfg.encoder is not None:
+        cfg = cfg.replace(encoder=None, family="dense")   # decoder only
+
+    cs_sds = None
+    if cfg.family == "vlm":
+        cs_sds = jax.ShapeDtypeStruct(
+            (batch, cfg.n_vision_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+
+    p_sds = jax.eval_shape(functools.partial(init_model, cfg=cfg),
+                           jax.random.PRNGKey(0))
+    if kind == "decode":
+        c_sds = jax.eval_shape(functools.partial(
+            init_caches, cfg, batch, seq, dtype=cfg.dtype))
+        tok = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+
+        def fn(p, t, c):
+            pos = jnp.full((1,), seq - 1, jnp.int32)
+            logits, c2, _ = apply_model(p, t, cfg, positions=pos, caches=c)
+            return logits
+
+        compiled = jax.jit(fn).lower(p_sds, tok, c_sds).compile()
+    else:
+        tok = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+        def fn(p, t, cs):
+            logits, _, _ = apply_model(p, t, cfg, cross_src=cs)
+            return logits
+
+        compiled = jax.jit(fn).lower(p_sds, tok, cs_sds).compile()
+
+    xla_flops = float((compiled.cost_analysis() or {}).get("flops", 0.0))
+    sc = step_cost(cfg, kind, seq, batch)
+    analytic = sc.flops
+    if kind == "prefill":
+        analytic = analytic  # fwd only; step_cost(prefill) is fwd only
+    ratio = analytic / xla_flops if xla_flops else float("nan")
+    return xla_flops, analytic, ratio
+
+
+def main():
+    print(f"{'arch':28s} {'kind':8s} {'xla_flops':>12s} {'analytic':>12s} "
+          f"{'ratio':>6s}")
+    for arch in ARCHS:
+        for kind in ("prefill", "decode"):
+            try:
+                x, a, r = validate(arch, kind)
+                print(f"{arch:28s} {kind:8s} {x:12.3e} {a:12.3e} {r:6.2f}")
+            except Exception as e:  # pragma: no cover
+                print(f"{arch:28s} {kind:8s} ERROR {type(e).__name__}: "
+                      f"{str(e)[:80]}")
+
+
+if __name__ == "__main__":
+    main()

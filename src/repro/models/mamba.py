@@ -1,0 +1,230 @@
+"""Mamba2 block via State-Space Duality (SSD), arXiv:2405.21060.
+
+Two execution modes sharing one parameter set:
+  * ``ssd_chunked``  — training / prefill: chunked block-decomposition of the
+    semiseparable matrix (intra-chunk quadratic blocks + inter-chunk
+    recurrence carried by ``lax.scan``).  O(S·L) work, O(S/L) scan steps.
+  * ``ssd_decode``   — single-token recurrent update on the (B,H,P,N) state.
+
+Sharding note: projections and convs are kept as *separate* tensors per
+stream (z, x, B, C, dt) rather than one fused in_proj, so the d_inner/head
+axes shard cleanly over the 'model' mesh axis while the small B/C/dt
+streams stay replicated (see launch/sharding.py).
+
+State cache convention:
+  {"ssm": (B, H, P, N) f32,
+   "conv_x": (B, d_conv-1, d_inner), "conv_B"/"conv_C": (B, d_conv-1, G*N)}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import dense_init
+
+
+def _dims(cfg: ModelConfig):
+    mb = cfg.mamba
+    d_in = mb.d_inner(cfg.d_model)
+    H = mb.n_heads(cfg.d_model)
+    return mb, d_in, H, mb.head_dim, mb.n_groups, mb.d_state
+
+
+def init_mamba(key, cfg: ModelConfig):
+    mb, d_in, H, P, G, N = _dims(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    u = jax.random.uniform(ks[0], (H,), jnp.float32,
+                           np.log(1e-3), np.log(1e-1))
+    dt0 = jnp.exp(u)
+    conv_scale = 1.0 / np.sqrt(mb.d_conv)
+    return {
+        "wz": dense_init(ks[1], (cfg.d_model, d_in), dt),
+        "wx": dense_init(ks[2], (cfg.d_model, d_in), dt),
+        "wB": dense_init(ks[3], (cfg.d_model, G * N), dt),
+        "wC": dense_init(ks[4], (cfg.d_model, G * N), dt),
+        "wdt": dense_init(ks[5], (cfg.d_model, H), dt),
+        "conv_x": dense_init(ks[6], (mb.d_conv, d_in), dt, scale=conv_scale),
+        "conv_B": dense_init(ks[7], (mb.d_conv, G * N), dt, scale=conv_scale),
+        "conv_C": dense_init(ks[6], (mb.d_conv, G * N), dt, scale=conv_scale),
+        "conv_bx": jnp.zeros((d_in,), dt),
+        "conv_bB": jnp.zeros((G * N,), dt),
+        "conv_bC": jnp.zeros((G * N,), dt),
+        "dt_bias": (dt0 + jnp.log(-jnp.expm1(-dt0))).astype(jnp.float32),
+        "A_log": jnp.log(jax.random.uniform(ks[0], (H,), jnp.float32,
+                                            1.0, 16.0)),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_w": jnp.zeros((d_in,), dt),
+        "out_proj": dense_init(ks[1], (d_in, cfg.d_model), dt),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv over full sequence: x (B,S,C), w (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(pad[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(K))
+    return jax.nn.silu(y + b[None, None, :])
+
+
+def _conv_step(window, w, b):
+    """Single-token conv: window (B,K,C), w (K,C) -> (B,C)."""
+    return jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w) + b[None, :])
+
+
+def _segsum(x):
+    """x (..., L) -> (..., L, L): ss[i,j] = sum_{k=j+1..i} x_k, -inf above."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    ss = cs[..., :, None] - cs[..., None, :]
+    mask = np.tril(np.ones((L, L), bool))
+    return jnp.where(mask, ss, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, cfg: ModelConfig, init_state=None):
+    """xh (B,S,H,P), dt (B,S,H) post-softplus, A (H,) negative,
+    Bm/Cm (B,S,G,N).  Returns (y (B,S,H,P) f32, final_state (B,H,P,N))."""
+    mb = cfg.mamba
+    Bsz, S_in, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    L = min(mb.chunk_size, S_in)
+    pad = (-S_in) % L
+    if pad:   # padded positions get dt=0: no decay, no input
+        zp = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        xh, dt, Bm, Cm = zp(xh), zp(dt), zp(Bm), zp(Cm)
+    S = S_in + pad
+    nc = S // L
+    rep = H // G
+
+    f32 = jnp.float32
+    xh, dt, Bm, Cm = (t.astype(f32) for t in (xh, dt, Bm, Cm))
+    ch = lambda t: t.reshape((Bsz, nc, L) + t.shape[2:]).swapaxes(0, 1)
+    xc, dtc, Bc, Cc = ch(xh), ch(dt), ch(Bm), ch(Cm)   # (nc, B, L, ...)
+
+    st0 = (jnp.zeros((Bsz, H, P, N), f32) if init_state is None
+           else init_state.astype(f32))
+
+    def body(carry, inp):
+        """One chunk: intra-chunk quadratic block + state recurrence.
+        All O(L^2) intermediates live only inside this body (O(S/L) scan
+        steps, O(B·H·L^2) transient memory — not O(B·H·S·L))."""
+        st_prev = carry
+        xk, dtk, Bk, Ck = inp               # (B,L,...) one chunk
+        dA = dtk * A[None, None, :]                     # (B,L,H)
+        dAcs = jnp.cumsum(dA, axis=1)
+        Lmat = jnp.exp(_segsum(dA.transpose(0, 2, 1)))  # (B,H,L,L)
+        scores = jnp.einsum("blgn,bsgn->bgls", Ck, Bk)  # (B,G,L,L)
+        scores = jnp.repeat(scores, rep, axis=1)        # (B,H,L,L)
+        y_diag = jnp.einsum("bhls,bsh,bshp->blhp", scores * Lmat, dtk, xk)
+        # contribution of the carried state
+        Ck_h = jnp.repeat(Ck, rep, axis=2) if G != H else Ck
+        y_off = jnp.einsum("blhn,bhpn,blh->blhp", Ck_h, st_prev,
+                           jnp.exp(dAcs))
+        # chunk state update
+        decay_states = jnp.exp(dAcs[:, -1:, :] - dAcs)  # (B,L,H)
+        s_new = jnp.einsum("blgn,blh,blhp->bhpn",
+                           Bk, dtk * decay_states, xk)
+        st = st_prev * jnp.exp(dAcs[:, -1, :])[:, :, None, None] + s_new
+        return st, y_diag + y_off
+
+    final_state, yc = jax.lax.scan(body, st0, (xc, dtc, Bc, Cc))
+    y = yc.swapaxes(0, 1).reshape(Bsz, S, H, P)[:, :S_in]
+    return y, final_state
+
+
+def ssd_decode(xh, dt, A, Bm, Cm, state):
+    """Single-token recurrence.  xh (B,H,P), dt (B,H), Bm/Cm (B,G,N),
+    state (B,H,P,N) -> (y (B,H,P) f32, state')."""
+    B_, H, P = xh.shape
+    G, N = Bm.shape[1], Bm.shape[2]
+    rep = H // G
+    f32 = jnp.float32
+    xh, dt, Bm, Cm, state = (t.astype(f32) for t in (xh, dt, Bm, Cm, state))
+    Bh = jnp.repeat(Bm, rep, axis=1)                   # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    dA = jnp.exp(dt * A[None, :])                      # (B,H)
+    state = state * dA[:, :, None, None] + \
+        jnp.einsum("bh,bhp,bhn->bhpn", dt, xh, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    return y, state
+
+
+def _gated_norm(w, y, z, eps=1e-6):
+    """RMSNorm(y * silu(z)) — mamba2's norm-after-gate."""
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + eps)
+    return yf * (1.0 + w.astype(jnp.float32))
+
+
+def apply_mamba(params, x, cfg: ModelConfig, cache=None):
+    """x (B,S,d).  cache None -> full-sequence SSD; cache + S==1 ->
+    recurrent decode.  Returns (y (B,S,d), new_cache)."""
+    from repro.launch.sharding import hint
+    mb, d_in, H, P, G, N = _dims(cfg)
+    B, S, _ = x.shape
+    z = hint(x @ params["wz"], "batch", "seq", "ffn")
+    xs_r = hint(x @ params["wx"], "batch", "seq", "ffn")
+    Bm_r = x @ params["wB"]
+    Cm_r = x @ params["wC"]
+    dt_r = x @ params["wdt"]
+    A = -jnp.exp(params["A_log"])
+
+    if cache is None or S > 1:
+        if cache is not None:
+            cat = lambda c, t: jnp.concatenate([c.astype(t.dtype), t], 1)
+            xs_r = cat(cache["conv_x"], xs_r)
+            Bm_r = cat(cache["conv_B"], Bm_r)
+            Cm_r = cat(cache["conv_C"], Cm_r)
+        hx = _causal_conv(xs_r, params["conv_x"], params["conv_bx"])[:, -S:]
+        hB = _causal_conv(Bm_r, params["conv_B"], params["conv_bB"])[:, -S:]
+        hC = _causal_conv(Cm_r, params["conv_C"], params["conv_bC"])[:, -S:]
+        xh = hx.reshape(B, S, H, P)
+        Bm = hB.reshape(B, S, G, N)
+        Cm = hC.reshape(B, S, G, N)
+        dts = jax.nn.softplus(dt_r.astype(jnp.float32)
+                              + params["dt_bias"][None, None, :])
+        init_state = None if cache is None else cache["ssm"]
+        y, st = ssd_chunked(xh, dts, A, Bm, Cm, cfg, init_state)
+        y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(B, S, d_in)
+        new_cache = None
+        if cache is not None:
+            K = mb.d_conv
+            new_cache = {"ssm": st,
+                         "conv_x": xs_r[:, -(K - 1):].astype(cache["conv_x"].dtype),
+                         "conv_B": Bm_r[:, -(K - 1):].astype(cache["conv_B"].dtype),
+                         "conv_C": Cm_r[:, -(K - 1):].astype(cache["conv_C"].dtype)}
+    else:
+        wx_ = jnp.concatenate([cache["conv_x"].astype(xs_r.dtype), xs_r], 1)
+        wB_ = jnp.concatenate([cache["conv_B"].astype(Bm_r.dtype), Bm_r], 1)
+        wC_ = jnp.concatenate([cache["conv_C"].astype(Cm_r.dtype), Cm_r], 1)
+        hx = _conv_step(wx_, params["conv_x"], params["conv_bx"])
+        hB = _conv_step(wB_, params["conv_B"], params["conv_bB"])
+        hC = _conv_step(wC_, params["conv_C"], params["conv_bC"])
+        xh = hx.reshape(B, H, P)
+        Bm = hB.reshape(B, G, N)
+        Cm = hC.reshape(B, G, N)
+        dts = jax.nn.softplus(dt_r[:, 0].astype(jnp.float32)
+                              + params["dt_bias"][None, :])
+        y, st = ssd_decode(xh, dts, A, Bm, Cm, cache["ssm"])
+        y = y + params["D"][None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(B, 1, d_in)
+        new_cache = {"ssm": st,
+                     "conv_x": wx_[:, 1:].astype(cache["conv_x"].dtype),
+                     "conv_B": wB_[:, 1:].astype(cache["conv_B"].dtype),
+                     "conv_C": wC_[:, 1:].astype(cache["conv_C"].dtype)}
+
+    y = _gated_norm(params["norm_w"], y, z)
+    return (y.astype(x.dtype) @ params["out_proj"]), new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    mb, d_in, H, P, G, N = _dims(cfg)
+    K = mb.d_conv
+    return {"ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+            "conv_x": jnp.zeros((batch, K - 1, d_in), dtype),
+            "conv_B": jnp.zeros((batch, K - 1, G * N), dtype),
+            "conv_C": jnp.zeros((batch, K - 1, G * N), dtype)}

@@ -1,0 +1,191 @@
+"""Mixture-of-Experts layer.
+
+Dispatch is sort/gather based (MegaBlocks-style, adapted to static shapes):
+tokens are ordered by assigned expert via argsort, sliced into per-expert
+capacity buckets of static size C, run through the expert FFNs as one
+batched (E, C, d) computation, and scatter-added back.  This avoids the
+O(T·E·C·d) one-hot dispatch matmuls of the classic Switch formulation —
+dispatch/combine are pure data movement, so compiled FLOPs stay ~the useful
+expert FLOPs (visible in the roofline's MODEL_FLOPS/HLO_FLOPs ratio).
+
+The layer also returns the per-expert *workload* vector (token counts) and
+per-token routing choices — exactly the quantities DALI's scheduler,
+prefetcher and cache operate on (paper §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig, MoEConfig
+from .layers import _ACTS, dense_init, init_mlp, apply_mlp
+
+
+def expert_capacity(cfg_m: MoEConfig, n_tokens: int) -> int:
+    if cfg_m.capacity_factor <= 0:          # "full": no token ever dropped
+        return n_tokens
+    c = int(np.ceil(n_tokens * cfg_m.top_k / cfg_m.n_routed
+                    * cfg_m.capacity_factor))
+    return max(4, int(np.ceil(c / 4)) * 4)  # pad to tiling-friendly multiple
+
+
+def init_moe(key, cfg: ModelConfig):
+    m = cfg.moe
+    d = cfg.d_model
+    de = m.d_expert or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+
+    def stack_init(k, shape):
+        kk = jax.random.split(k, m.n_routed)
+        return jax.vmap(lambda k_: dense_init(k_, shape, dt))(kk)
+
+    p = {
+        "router": dense_init(ks[0], (d, m.n_routed), jnp.float32),
+        "gate": stack_init(ks[1], (d, de)),
+        "up": stack_init(ks[2], (d, de)),
+        "down": stack_init(ks[3], (de, d)),
+    }
+    if m.n_shared:
+        ds = m.d_shared or m.n_shared * de
+        shared_cfg = cfg.replace()
+        p["shared"] = init_mlp(ks[4], shared_cfg, d_ff=ds)
+    return p
+
+
+def route(params, x_flat, m: MoEConfig):
+    """x_flat (T, d) -> (gates (T,k), idx (T,k), probs (T,E), logits)."""
+    logits = (x_flat.astype(jnp.float32) @ params["router"])     # (T,E)
+    if m.router_type == "sigmoid":
+        probs = jax.nn.sigmoid(logits)
+        gates, idx = jax.lax.top_k(probs, m.top_k)
+    elif m.router_type == "topk_softmax":                        # Mixtral
+        top_logits, idx = jax.lax.top_k(logits, m.top_k)
+        gates = jax.nn.softmax(top_logits, axis=-1)
+        probs = jax.nn.softmax(logits, axis=-1)
+    else:                                                        # softmax_topk
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, idx = jax.lax.top_k(probs, m.top_k)
+    if m.renormalize and m.router_type != "topk_softmax":
+        gates = gates / (jnp.sum(gates, axis=-1, keepdims=True) + 1e-9)
+    return gates, idx, probs, logits
+
+
+def expert_ffn_dense(params, xe, cfg: ModelConfig):
+    """Batched per-expert SwiGLU: xe (E, C, d) -> (E, C, d).
+
+    The Pallas grouped kernel in repro.kernels.expert_ffn implements the
+    same contraction with explicit VMEM tiling; this is the jnp path used
+    on non-TPU backends and as the kernel's oracle."""
+    from repro.launch.sharding import hint
+    act = _ACTS[cfg.act]
+    h = act(jnp.einsum("ecd,edf->ecf", xe, params["gate"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, params["up"])
+    h = hint(h, "experts", "cap", "expert_ffn")
+    return jnp.einsum("ecf,efd->ecd", h, params["down"])
+
+
+# token-chunked execution: data-dependent dispatch gathers make GSPMD
+# replicate token-sized buffers, so bound them by scanning over chunks of
+# at most this many tokens (per-chunk capacity keeps the same expected
+# per-expert throughput; standard long-sequence MoE practice).
+MOE_CHUNK_TOKENS = 16384
+
+
+def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None):
+    """Returns (y, info) where info carries DALI's routing observables."""
+    from repro.launch.sharding import hint
+    from repro.models.moe_ep import apply_moe_ep, ep_applicable
+    m = cfg.moe
+    B, S, d = x.shape
+    T_all = B * S
+    if ep_applicable(cfg, B, S):
+        # production path under an active mesh: shard_map expert-parallel
+        # all-to-all dispatch (see moe_ep.py / EXPERIMENTS.md §Perf)
+        return apply_moe_ep(params, x, cfg, capacity=capacity)
+    if T_all > MOE_CHUNK_TOKENS and T_all % MOE_CHUNK_TOKENS == 0:
+        n_chunks = T_all // MOE_CHUNK_TOKENS
+        cap_c = (capacity + n_chunks - 1) // n_chunks \
+            if capacity is not None else None
+        xc = x.reshape(n_chunks, 1, MOE_CHUNK_TOKENS, d)
+
+        def body(_, x_chunk):
+            y, info = apply_moe(params, x_chunk, cfg, capacity=cap_c)
+            return None, (y, info)
+
+        _, (yc, infos) = jax.lax.scan(body, None, xc)
+        y = yc.reshape(B, S, d)
+        info = {
+            "workload": infos["workload"].sum(0),
+            "topk_idx": infos["topk_idx"].reshape(T_all, -1),
+            "gates": infos["gates"].reshape(T_all, -1),
+            "probs": infos["probs"].reshape(T_all, -1),
+            "gate_in": infos["gate_in"].reshape(T_all, d),
+            "aux_loss": infos["aux_loss"].mean(),
+            "z_loss": infos["z_loss"].mean(),
+            "dropped": infos["dropped"].sum(),
+        }
+        return y, info
+    T = T_all
+    E, K = m.n_routed, m.top_k
+    C = capacity if capacity is not None else expert_capacity(m, T)
+    xf = hint(x.reshape(T, d), "tokens", "embed")
+
+    gates, idx, probs, logits = route(params, xf, m)
+
+    # ---- sort-based dispatch (gather-only; no float scatters) ---------------
+    flat_e = idx.reshape(-1)                       # (T*K,) expert ids, k-minor
+    flat_t = jnp.repeat(jnp.arange(T), K)          # source token per slot
+    order = jnp.argsort(flat_e, stable=True)       # group by expert
+    se, st = flat_e[order], flat_t[order]
+    counts = jnp.bincount(flat_e, length=E)                       # workload
+    offsets = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                               jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(T * K) - offsets[se]         # rank within expert group
+
+    # gather tokens into (E, C) capacity buckets
+    pos = offsets[:E, None] + jnp.arange(C)[None, :]              # (E, C)
+    bucket_valid = jnp.arange(C)[None, :] < jnp.minimum(counts[:, None], C)
+    src_tok = st[jnp.clip(pos, 0, T * K - 1)]                     # (E, C)
+    xe = jnp.where(bucket_valid[..., None], xf[src_tok], 0)
+
+    xe = hint(xe, "experts", "cap", "embed")
+    ye = expert_ffn_dense(params, xe, cfg)                        # (E,C,d)
+    ye = hint(ye, "experts", "cap", "embed")
+
+    # gather results back per (token, k) slot: invert the sort with an
+    # int32 scatter (cheap), then weighted-sum over the K choices.
+    inv = jnp.zeros((T * K,), jnp.int32).at[order].set(
+        jnp.arange(T * K, dtype=jnp.int32))
+    rank_tk = rank[inv]                                           # (T*K,)
+    keep = rank_tk < C
+    contrib = ye[flat_e, jnp.where(keep, rank_tk, 0)]             # (T*K, d)
+    contrib = hint(jnp.where(keep[:, None], contrib, 0),
+                   "tokens", "embed")
+    y = jnp.sum(contrib.reshape(T, K, d)
+                * gates.astype(contrib.dtype)[..., None], axis=1)
+    y = hint(y.astype(x.dtype), "tokens", "embed")
+
+    if m.n_shared:
+        y = y + apply_mlp(params["shared"], xf, cfg)
+
+    # ---- aux losses + DALI observables --------------------------------------
+    frac_tokens = counts.astype(jnp.float32) / (T * K)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux_loss = E * jnp.sum(frac_tokens * mean_prob)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    info = {
+        "workload": counts,                        # (E,) tokens per expert
+        "topk_idx": idx,                           # (T, K)
+        "gates": gates,                            # (T, K)
+        "probs": probs,                            # (T, E) router scores
+        "gate_in": xf,                             # (T, d) gate input (trace)
+        "aux_loss": aux_loss * m.aux_loss_weight,
+        "z_loss": z_loss * m.router_z_weight,
+        "dropped": jnp.sum(~keep).astype(jnp.int32),
+    }
+    return y.reshape(B, S, d), info

@@ -1,0 +1,201 @@
+"""Expert-parallel MoE via shard_map + all-to-all (the production dispatch
+path; EXPERIMENTS.md §Perf).
+
+GSPMD cannot partition data-dependent gather/scatter dispatch — it falls
+back to replicating token- and bucket-sized buffers and all-gathering them
+per layer (measured: the dominant roofline term for every MoE train/prefill
+pair).  This module instead expresses the dispatch *per device*:
+
+  1. tokens are split (batch over data/pod, sequence over model),
+  2. each device routes its own tokens and packs per-expert capacity
+     buckets locally (sort/gather, zero collectives),
+  3. one ``all_to_all`` over 'model' ships each bucket to the expert's
+     owner; experts compute; a second ``all_to_all`` ships results back,
+  4. results combine locally; the (B, S, d) output re-enters the GSPMD
+     world through the out_specs.
+
+Collectives per layer drop from O(all-gather everything) to
+2 x all_to_all(T_local·K·cf·d / tp) + the output reshard.
+
+Used automatically by ``apply_moe`` when sharding rules are active,
+E % tp == 0 and the token dims divide; decode and single-device runs keep
+the dense path.  Differentiable (all_to_all transposes to all_to_all), so
+train_step uses it too.  FSDP expert weights are all-gathered over 'data'
+once per layer inside the shard (explicit, instead of per-buffer GSPMD
+gathers).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+
+
+def ep_applicable(cfg: ModelConfig, B: int, S: int) -> bool:
+    from repro.launch import sharding as shd
+    st = shd.active()
+    mesh = st["mesh"]
+    if mesh is None or "model" not in mesh.axis_names:
+        return False
+    tp = mesh.shape["model"]
+    E = cfg.moe.n_routed
+    if E < tp or E % tp:
+        return False
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    if B % dp or S % tp:
+        return False
+    if (B // dp) * (S // tp) < 64:       # decode / tiny shards: dense path
+        return False
+    return True
+
+
+def _local_dispatch(xf, gates, idx, E, K, C, d):
+    """Sort/gather capacity-bucket dispatch on purely local data."""
+    T = xf.shape[0]
+    flat_e = idx.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st_ = flat_e[order], flat_t[order]
+    counts = jnp.bincount(flat_e, length=E)
+    offsets = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                               jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(T * K) - offsets[se]
+    pos = offsets[:E, None] + jnp.arange(C)[None, :]
+    valid = jnp.arange(C)[None, :] < jnp.minimum(counts[:, None], C)
+    src = st_[jnp.clip(pos, 0, T * K - 1)]
+    xe = jnp.where(valid[..., None], xf[src], 0)
+    inv = jnp.zeros((T * K,), jnp.int32).at[order].set(
+        jnp.arange(T * K, dtype=jnp.int32))
+    rank_tk = rank[inv]
+    keep = rank_tk < C
+    return xe, counts, flat_e, rank_tk, keep
+
+
+def apply_moe_ep(params, x, cfg: ModelConfig, *,
+                 capacity: Optional[int] = None):
+    """shard_map expert-parallel MoE.  x (B,S,d) -> (y, info)."""
+    from jax.experimental.shard_map import shard_map
+    from repro.launch import sharding as shd
+    from repro.models.layers import _ACTS, apply_mlp
+    from repro.models.moe import expert_capacity, route
+
+    st = shd.active()
+    mesh = st["mesh"]
+    fsdp = st["wmode"] == "fsdp"
+    m = cfg.moe
+    B, S, d = x.shape
+    E, K = m.n_routed, m.top_k
+    tp = mesh.shape["model"]
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = 1
+    for a in dp_axes:
+        dp *= mesh.shape[a]
+    T_my = (B // dp) * (S // tp)
+    C = expert_capacity(m, T_my)
+    dpa = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    fs = "data" if fsdp else None
+    w_spec = P("model", None, fs)
+    w_spec_dn = P("model", fs, None)
+    # shared experts evaluate each device's OWN tokens -> weights must be
+    # replicated over 'model' inside the shard (fsdp: 'data'-sharded with
+    # an explicit in-body gather)
+    shared_specs = None
+    if m.n_shared:
+        shared_specs = {k: P(None, fs) if k in ("gate", "up")
+                        else P(fs, None)
+                        for k in params["shared"]}
+
+    def body(router, wg, wu, wd, shared, xb):
+        # xb: (B/dp, S/tp, d) — this device's tokens
+        xf = xb.reshape(-1, d)
+        gates, idx, probs, logits = route({"router": router}, xf, m)
+        xe, counts, flat_e, rank_tk, keep = _local_dispatch(
+            xf, gates, idx, E, K, C, d)
+
+        if fsdp:    # materialise full expert weights once, explicitly
+            wg = jax.lax.all_gather(wg, "data", axis=2, tiled=True)
+            wu = jax.lax.all_gather(wu, "data", axis=2, tiled=True)
+            wd = jax.lax.all_gather(wd, "data", axis=1, tiled=True)
+
+        # ship buckets to expert owners.  split==concat axis keeps the
+        # all_to_all self-transposing (AD-safe): dim0 switches meaning
+        # from destination-block to source-block.
+        xa = jax.lax.all_to_all(xe.reshape(tp, E // tp, C, d), "model",
+                                split_axis=0, concat_axis=0)
+        xa = jnp.moveaxis(xa, 0, 1).reshape(E // tp, tp * C, d)
+
+        act = _ACTS[cfg.act]
+        h = act(jnp.einsum("ecd,edf->ecf", xa, wg)) \
+            * jnp.einsum("ecd,edf->ecf", xa, wu)
+        ye = jnp.einsum("ecf,efd->ecd", h, wd)          # (E/tp, tp*C, d)
+
+        # inverse exchange back to the original token owner
+        ya = jnp.moveaxis(ye.reshape(E // tp, tp, C, d), 1, 0)
+        ya = jax.lax.all_to_all(ya, "model", split_axis=0, concat_axis=0)
+        ye_loc = ya.reshape(E, C, d)
+
+        contrib = ye_loc[flat_e, jnp.where(keep, rank_tk, 0)]
+        contrib = jnp.where(keep[:, None], contrib, 0)
+        y = jnp.sum(contrib.reshape(-1, K, d)
+                    * gates.astype(contrib.dtype)[..., None], axis=1)
+        y = y.astype(xb.dtype)
+        if m.n_shared:
+            sh = dict(shared)
+            if fsdp:
+                sh = {k: jax.lax.all_gather(
+                    v, "data", axis=(1 if k in ("gate", "up") else 0),
+                    tiled=True) for k, v in sh.items()}
+            y = y + apply_mlp(sh, xf, cfg)
+
+        # global observables
+        g_counts = jax.lax.psum(counts, ("model",) + dp_axes)
+        frac = counts.astype(jnp.float32) / (xf.shape[0] * K)
+        aux = E * jnp.sum(frac * jnp.mean(probs, axis=0))
+        aux = jax.lax.pmean(aux, ("model",) + dp_axes)
+        z = jax.lax.pmean(
+            jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+            ("model",) + dp_axes)
+        dropped = jax.lax.psum(jnp.sum(~keep).astype(jnp.int32),
+                               ("model",) + dp_axes)
+        Bl, Sl = xb.shape[0], xb.shape[1]
+        info = {
+            "workload": g_counts,
+            "topk_idx": idx.reshape(Bl, Sl, K),
+            "gates": gates.reshape(Bl, Sl, K),
+            "probs": probs.reshape(Bl, Sl, E),
+            "gate_in": xf.reshape(Bl, Sl, d),
+            "aux_loss": aux * m.aux_loss_weight,
+            "z_loss": z * m.router_z_weight,
+            "dropped": dropped,
+        }
+        return y.reshape(Bl, Sl, d), info
+
+    tok3 = P(dpa, "model", None)
+    info_specs = {
+        "workload": P(None), "topk_idx": tok3, "gates": tok3,
+        "probs": tok3, "gate_in": tok3,
+        "aux_loss": P(), "z_loss": P(), "dropped": P(),
+    }
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, None), w_spec, w_spec, w_spec_dn,
+                  shared_specs, tok3),
+        out_specs=(tok3, info_specs),
+        check_rep=False)
+    y, info = fn(params["router"], params["gate"], params["up"],
+                 params["down"], params.get("shared"), x)
+    T_all = B * S
+    info = dict(info,
+                topk_idx=info["topk_idx"].reshape(T_all, K),
+                gates=info["gates"].reshape(T_all, K),
+                probs=info["probs"].reshape(T_all, E),
+                gate_in=info["gate_in"].reshape(T_all, d))
+    return y, info

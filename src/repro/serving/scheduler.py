@@ -1,0 +1,142 @@
+"""Wave-based batch scheduler for the example server.
+
+Requests are queued, grouped into fixed-size waves of equal (padded) prompt
+length, prefilled once, then decoded synchronously until every sequence in
+the wave hits EOS or its token budget.  Positions are synchronised across a
+wave (a documented simplification vs slot-level continuous batching: the
+model's cache API uses a shared position vector; per-slot admission is
+future work tracked in DESIGN.md).
+
+Reports per-request latency and aggregate prefill/decode throughput, plus
+DALI scheduling telemetry (estimated device times, cache hit rate, link
+traffic) when the engine is enabled.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import DaliConfig
+from repro.models.config import ModelConfig
+from repro.serving.steps import (init_serve_state, make_decode_step,
+                                 make_prefill_step)
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (S,) int32
+    max_new_tokens: int = 32
+    submitted_at: float = 0.0
+    output: List[int] = field(default_factory=list)
+    done_at: float = 0.0
+
+
+@dataclass
+class ServeMetrics:
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    waves: int = 0
+    dali_moe_time_est: float = 0.0
+    dali_link_time_est: float = 0.0
+    dali_hits: int = 0
+    dali_lookups: int = 0
+
+    def summary(self) -> str:
+        pf = self.prefill_tokens / self.prefill_s if self.prefill_s else 0
+        dc = self.decode_tokens / self.decode_s if self.decode_s else 0
+        s = (f"waves={self.waves} prefill={pf:.1f} tok/s "
+             f"decode={dc:.1f} tok/s")
+        if self.dali_lookups:
+            s += (f" | DALI est: moe={self.dali_moe_time_est:.3f}s "
+                  f"link={self.dali_link_time_est:.3f}s "
+                  f"hit%={100*self.dali_hits/self.dali_lookups:.1f}")
+        return s
+
+
+class BatchServer:
+    def __init__(self, params, cfg: ModelConfig, batch_size: int = 8,
+                 max_len: int = 256, eos_id: int = 1,
+                 dali_cfg: Optional[DaliConfig] = None, res_vecs=None):
+        self.params = params
+        self.cfg = cfg
+        self.batch = batch_size
+        self.max_len = max_len
+        self.eos = eos_id
+        self.dali_cfg = dali_cfg
+        self.res_vecs = res_vecs
+        self.queue: deque[Request] = deque()
+        self.metrics = ServeMetrics()
+        self._prefill = jax.jit(make_prefill_step(cfg, max_len))
+        self._decode = jax.jit(make_decode_step(cfg, dali_cfg))
+
+    def submit(self, req: Request):
+        req.submitted_at = time.perf_counter()
+        self.queue.append(req)
+
+    def run(self) -> List[Request]:
+        finished: List[Request] = []
+        while self.queue:
+            wave = [self.queue.popleft()
+                    for _ in range(min(self.batch, len(self.queue)))]
+            finished.extend(self._run_wave(wave))
+        return finished
+
+    # -- internals ---------------------------------------------------------
+    def _run_wave(self, wave: List[Request]) -> List[Request]:
+        B = self.batch
+        S = max(len(r.prompt) for r in wave)
+        prompts = np.zeros((B, S), np.int32)
+        for i, r in enumerate(wave):
+            prompts[i, S - len(r.prompt):] = r.prompt   # left-pad
+        budget = max(r.max_new_tokens for r in wave)
+
+        state = init_serve_state(self.cfg, B, self.max_len,
+                                 dali_cfg=self.dali_cfg)
+        t0 = time.perf_counter()
+        tok, caches = self._prefill(self.params, jnp.asarray(prompts),
+                                    state["caches"])
+        tok.block_until_ready()
+        self.metrics.prefill_s += time.perf_counter() - t0
+        self.metrics.prefill_tokens += B * S
+        state = dict(state, tokens=tok, caches=caches,
+                     pos=jnp.asarray(S, jnp.int32))
+
+        live = np.array([i < len(wave) for i in range(B)])
+        t0 = time.perf_counter()
+        for _ in range(min(budget, self.max_len - S - 1)):
+            state, logits, tel = self._decode(self.params, state,
+                                              self.res_vecs)
+            toks = np.asarray(state["tokens"])[:, 0]
+            for i, r in enumerate(wave):
+                if live[i]:
+                    r.output.append(int(toks[i]))
+                    if toks[i] == self.eos or len(r.output) >= r.max_new_tokens:
+                        live[i] = False
+                        r.done_at = time.perf_counter()
+            self.metrics.decode_tokens += int(live.sum()) + \
+                sum(1 for i, r in enumerate(wave) if not live[i]
+                    and r.output and r.output[-1] == int(toks[i]))
+            if tel:
+                self.metrics.dali_moe_time_est += float(tel["step_moe_time"])
+                self.metrics.dali_link_time_est += float(
+                    jnp.sum(tel["link_seconds"]))
+                self.metrics.dali_hits += int(jnp.sum(tel["hits"]))
+                self.metrics.dali_lookups += int(jnp.sum(tel["hits"])
+                                                 + jnp.sum(tel["misses"]))
+            if not live.any():
+                break
+        self.metrics.decode_s += time.perf_counter() - t0
+        self.metrics.waves += 1
+        for r in wave:
+            if not r.done_at:
+                r.done_at = time.perf_counter()
+        return wave

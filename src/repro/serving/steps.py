@@ -1,0 +1,122 @@
+"""Serving step functions: prefill / decode, with optional in-graph DALI
+scheduling for MoE architectures.
+
+The decode step is the unit the dry-run lowers for ``decode_32k`` /
+``long_500k`` shapes: ONE new token against a KV cache of ``max_len``.
+All functions are pure and jit/pjit-friendly; state is an explicit pytree:
+
+  ServeState = {
+    "tokens":     (B, 1) int32   — last generated token per sequence
+    "pos":        ()     int32   — current position (synchronised batch)
+    "caches":     model caches pytree
+    "dali":       DALI scheduler state (MoE archs with engine enabled)
+    "rng":        PRNG key
+  }
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import DaliConfig, dali_schedule, init_dali_state
+from repro.models.config import ModelConfig
+from repro.models.model import (apply_model, collect_field, init_caches,
+                                stack_routers)
+from repro.models.moe import expert_capacity
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int,
+                      moe_capacity: Optional[int] = None):
+    """Returns prefill(params, tokens (B,S), caches, cross_src) ->
+    (next_token (B,1), caches)."""
+
+    def prefill(params, tokens, caches, cross_src=None):
+        S = tokens.shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        logits, caches, _ = apply_model(params, tokens, cfg,
+                                        positions=positions, caches=caches,
+                                        cross_src=cross_src,
+                                        moe_capacity=moe_capacity,
+                                        last_logit_only=True)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, dali_cfg: Optional[DaliConfig] = None,
+                     moe_capacity: Optional[int] = None,
+                     sample: bool = False, temperature: float = 1.0):
+    """Returns decode(params, state, res_vecs=None) -> (state', logits,
+    telemetry).  With ``dali_cfg`` the DALI scheduler (greedy assignment +
+    residual prefetch + workload cache, paper §4) runs in-graph each step."""
+    use_dali = dali_cfg is not None and cfg.moe is not None
+
+    def decode(params, state, res_vecs=None):
+        positions = state["pos"] + jnp.arange(1, dtype=jnp.int32)
+        logits, caches, infos = apply_model(
+            params, state["tokens"], cfg, positions=positions,
+            caches=state["caches"], moe_capacity=moe_capacity,
+            trace=use_dali)
+        if sample:
+            rng, sub = jax.random.split(state["rng"])
+            nxt = jax.random.categorical(
+                sub, logits[:, -1] / temperature, axis=-1)[:, None]
+        else:
+            rng = state["rng"]
+            nxt = jnp.argmax(logits[:, -1:], axis=-1)
+        new_state = dict(state, tokens=nxt.astype(jnp.int32),
+                         pos=state["pos"] + 1, caches=caches, rng=rng)
+        telemetry = {}
+        if use_dali:
+            workloads = collect_field(infos, "workload")        # (L, E)
+            gate_in = collect_field(infos, "gate_in")           # (L, T, d)
+            routers = stack_routers(params, cfg)                # (L, d, E)
+            if res_vecs is None:
+                res_vecs = jnp.zeros(
+                    (workloads.shape[0], cfg.d_model), jnp.float32)
+            new_dali, telemetry = dali_schedule(
+                state["dali"], workloads, gate_in, routers, res_vecs,
+                dali_cfg, top_k=cfg.moe.top_k,
+                router_type=cfg.moe.router_type)
+            new_state["dali"] = new_dali
+        return new_state, logits, telemetry
+
+    return decode
+
+
+def init_serve_state(cfg: ModelConfig, batch: int, max_len: int,
+                     dali_cfg: Optional[DaliConfig] = None,
+                     dtype=None, n_cross: Optional[int] = None, seed: int = 0):
+    state = {
+        "tokens": jnp.zeros((batch, 1), jnp.int32),
+        "pos": jnp.zeros((), jnp.int32),
+        "caches": init_caches(cfg, batch, max_len, dtype=dtype,
+                              n_cross=n_cross),
+        "rng": jax.random.PRNGKey(seed),
+    }
+    if dali_cfg is not None and cfg.moe is not None:
+        state["dali"] = init_dali_state(dali_cfg)
+    return state
+
+
+def default_dali_config(cfg: ModelConfig, cache_ratio: float = 0.25,
+                        prefetch_size: int = 1, w_size: int = 4,
+                        u_size: int = 1) -> Optional[DaliConfig]:
+    """Paper defaults: cache 25-50% of experts/layer; (w,u)=(4,1) Mixtral-
+    like, (4,8) for many-expert models (§6.4)."""
+    if cfg.moe is None:
+        return None
+    from repro.core.cost_model import CostModel, LOCAL_PC
+    from repro.models.config import layer_pattern
+    n_moe = sum(1 for _, mlp in layer_pattern(cfg) if mlp == "moe")
+    E = cfg.moe.n_routed
+    cm = CostModel.for_config(cfg, LOCAL_PC)
+    return DaliConfig.from_cost_model(
+        cm, n_moe_layers=n_moe, n_experts=E,
+        cache_size=max(1, int(E * cache_ratio)),
+        prefetch_size=prefetch_size, w_size=w_size,
+        u_size=min(u_size, max(1, E // 2)))

@@ -1,0 +1,82 @@
+"""AdamW with global-norm clipping and cosine/linear-warmup schedule.
+
+Pure-pytree implementation (no optax dependency): ``init_adamw`` builds the
+optimizer state, ``adamw_update`` is a pure function suitable for pjit with
+donated state.  Master weights/moments are f32 regardless of param dtype.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(step, oc: OptConfig):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(oc.warmup_steps, 1)
+    t = (step - oc.warmup_steps) / jnp.maximum(
+        oc.total_steps - oc.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = oc.min_lr_frac + (1 - oc.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return oc.lr * jnp.where(step < oc.warmup_steps, warm, cos)
+
+
+def init_adamw(params):
+    zeros = lambda p: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    return {"mu": zeros(params), "nu": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _decay_mask(path_leaf):
+    """No weight decay for norms / scalars / biases (ndim < 2)."""
+    return path_leaf.ndim >= 2
+
+
+def adamw_update(params, grads, opt_state, oc: OptConfig):
+    step = opt_state["step"] + 1
+    lr = schedule(step, oc)
+    b1, b2 = oc.betas
+
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)) + 1e-20)
+    scale = jnp.minimum(1.0, oc.clip_norm / gnorm)
+
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mhat = mu / bc1
+        nhat = nu / bc2
+        delta = mhat / (jnp.sqrt(nhat) + oc.eps)
+        if _decay_mask(p):
+            delta = delta + oc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(opt_state["mu"])
+    flat_nu = jax.tree.leaves(opt_state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n
+           in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    new_nu = tdef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, \
+        {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,60 @@
+"""Loss and train-step builders.
+
+Loss = token cross-entropy (f32 logits) + logit z-loss + MoE auxiliary
+load-balance + router z-loss (collected from every MoE block).  The builder
+returns a pure ``train_step(params, opt_state, batch) -> (params',
+opt_state', metrics)`` suitable for jit / pjit with donation.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import apply_model, collect_moe_scalars
+from repro.training.optimizer import OptConfig, adamw_update
+
+
+def cross_entropy(logits, labels, z_weight: float = 1e-4):
+    """logits (B,S,V) f32, labels (B,S) int32 (-1 = masked)."""
+    V = logits.shape[-1]
+    mask = (labels >= 0).astype(jnp.float32)
+    lbl = jnp.clip(labels, 0, V - 1)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, lbl[..., None], -1)[..., 0] - lse
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = -(ll * mask).sum() / denom
+    z = ((lse ** 2) * mask).sum() / denom
+    return ce + z_weight * z, ce
+
+
+def make_loss_fn(cfg: ModelConfig, moe_capacity: Optional[int] = None):
+    def loss_fn(params, batch):
+        logits, _, infos = apply_model(
+            params, batch["tokens"], cfg, cross_src=batch.get("cross_src"),
+            moe_capacity=moe_capacity)
+        loss, ce = cross_entropy(logits, batch["labels"])
+        moe = collect_moe_scalars(infos)
+        total = loss + moe["aux_loss"] + moe["z_loss"]
+        metrics = {"loss": total, "ce": ce, "aux": moe["aux_loss"],
+                   "router_z": moe["z_loss"], "dropped": moe["dropped"]}
+        return total, metrics
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, oc: OptConfig,
+                    moe_capacity: Optional[int] = None):
+    loss_fn = make_loss_fn(cfg, moe_capacity)
+
+    def train_step(params, opt_state, batch):
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, oc)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step

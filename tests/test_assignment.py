@@ -1,0 +1,88 @@
+"""Greedy Assignment (paper Alg. 1) unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.assignment import (all_cpu, beam_search_assign, greedy_assign,
+                                   greedy_assign_jnp, optimal_assign,
+                                   static_assign)
+
+
+def _rand_costs(rng, n):
+    active = rng.random(n) > 0.25
+    tc = rng.random(n) * active
+    tg = rng.random(n) * active
+    return tc, tg, active
+
+
+def test_greedy_matches_paper_algorithm_by_hand():
+    # worked example: expert 0 much faster on GPU, expert 1 on CPU
+    tc = np.array([10.0, 1.0, 3.0])
+    tg = np.array([1.0, 10.0, 2.9])
+    a = greedy_assign(tc, tg)
+    assert a.on_gpu[0] and a.on_cpu[1]
+    assert a.makespan <= 3.9 + 1e-9
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(2, 24), st.integers(0, 10_000))
+def test_greedy_properties(n, seed):
+    rng = np.random.default_rng(seed)
+    tc, tg, active = _rand_costs(rng, n)
+    a = greedy_assign(tc, tg)
+    # every activated expert assigned to exactly one device
+    assert np.array_equal(a.on_cpu | a.on_gpu, active)
+    assert not np.any(a.on_cpu & a.on_gpu)
+    # accumulated times consistent
+    np.testing.assert_allclose(a.t_cpu, tc[a.on_cpu].sum(), rtol=1e-9)
+    np.testing.assert_allclose(a.t_gpu, tg[a.on_gpu].sum(), rtol=1e-9)
+    # greedy never exceeds the trivial single-device plans
+    assert a.makespan <= min(tc[active].sum(), tg[active].sum()) + 1e-9
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(2, 14), st.integers(0, 10_000))
+def test_greedy_near_optimal(n, seed):
+    rng = np.random.default_rng(seed)
+    tc, tg, active = _rand_costs(rng, n)
+    if not active.any():
+        return
+    g = greedy_assign(tc, tg)
+    o = optimal_assign(tc, tg)            # exact B&B at this size
+    assert o.makespan <= g.makespan + 1e-9
+    # greedy list-scheduling is a 2-approximation
+    assert g.makespan <= 2 * o.makespan + 1e-9
+    b = beam_search_assign(tc, tg, beam=4)
+    assert o.makespan <= b.makespan + 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 20), st.integers(0, 10_000))
+def test_greedy_jnp_parity(n, seed):
+    rng = np.random.default_rng(seed)
+    tc, tg, _ = _rand_costs(rng, n)
+    a = greedy_assign(tc, tg)
+    oc, og, Tc, Tg = greedy_assign_jnp(jnp.asarray(tc, jnp.float32),
+                                       jnp.asarray(tg, jnp.float32))
+    assert np.array_equal(np.asarray(oc), a.on_cpu)
+    assert np.array_equal(np.asarray(og), a.on_gpu)
+
+
+def test_optimal_dp_large_n_reasonable():
+    rng = np.random.default_rng(0)
+    tc, tg, _ = _rand_costs(rng, 64)       # DP path (> exact_limit)
+    g = greedy_assign(tc, tg)
+    o = optimal_assign(tc, tg)
+    assert o.makespan <= g.makespan * 1.05 + 1e-9
+
+
+def test_static_and_naive():
+    w = np.array([0, 5, 1, 9])
+    tc = np.array([0, .5, .1, .9])
+    tg = np.array([0, .2, .2, .2])
+    s = static_assign(w, tc, tg, threshold=2)
+    assert list(np.where(s.on_gpu)[0]) == [1, 3]
+    assert list(np.where(s.on_cpu)[0]) == [2]
+    n = all_cpu(tc, tg)
+    assert n.t_gpu == 0 and n.t_cpu == tc[1:].sum()

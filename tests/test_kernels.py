@@ -1,0 +1,76 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU), with
+shape/dtype sweeps per the deliverable."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.expert_ffn.kernel import expert_ffn
+from repro.kernels.expert_ffn.ref import expert_ffn_ref
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.gating.kernel import gating
+from repro.kernels.gating.ref import gating_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dt):
+    return 3e-2 if dt == jnp.bfloat16 else 3e-5
+
+
+@pytest.mark.parametrize("E,C,d,f", [
+    (2, 128, 128, 256), (4, 256, 64, 512), (8, 128, 256, 1024),
+    (1, 384, 128, 384),
+])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("act", ["silu", "gelu"])
+def test_expert_ffn(E, C, d, f, dt, act):
+    xe = jnp.asarray(RNG.standard_normal((E, C, d)), dt)
+    wg = jnp.asarray(RNG.standard_normal((E, d, f)) * 0.05, dt)
+    wu = jnp.asarray(RNG.standard_normal((E, d, f)) * 0.05, dt)
+    wd = jnp.asarray(RNG.standard_normal((E, f, d)) * 0.05, dt)
+    y = expert_ffn(xe, wg, wu, wd, act=act, block_c=128, block_f=128,
+                   interpret=True)
+    r = expert_ffn_ref(xe, wg, wu, wd, act=act)
+    scale = float(jnp.abs(r.astype(jnp.float32)).max()) + 1e-6
+    err = float(jnp.abs(y.astype(jnp.float32)
+                        - r.astype(jnp.float32)).max()) / scale
+    assert err < _tol(dt), err
+
+
+@pytest.mark.parametrize("B,Sq,Sk,Hq,Hkv,D,causal,window,cap", [
+    (1, 128, 128, 4, 2, 64, True, 0, 0.0),
+    (2, 128, 256, 8, 8, 32, True, 0, 50.0),
+    (1, 64, 192, 4, 1, 64, True, 64, 0.0),
+    (2, 128, 128, 2, 2, 128, False, 0, 0.0),
+    (1, 256, 256, 16, 2, 64, True, 0, 30.0),
+])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, Sq, Sk, Hq, Hkv, D, causal, window, cap, dt):
+    q = jnp.asarray(RNG.standard_normal((B, Sq, Hq, D)), dt)
+    k = jnp.asarray(RNG.standard_normal((B, Sk, Hkv, D)), dt)
+    v = jnp.asarray(RNG.standard_normal((B, Sk, Hkv, D)), dt)
+    o = flash_attention(q, k, v, causal=causal, window=window, softcap=cap,
+                        block_q=64, block_k=64, interpret=True)
+    r = flash_attention_ref(q, k, v, causal=causal, window=window,
+                            softcap=cap)
+    err = float(jnp.abs(o.astype(jnp.float32)
+                        - r.astype(jnp.float32)).max())
+    assert err < _tol(dt), err
+
+
+@pytest.mark.parametrize("T,E,k,rt,renorm", [
+    (128, 8, 2, "topk_softmax", True),       # Mixtral router
+    (256, 64, 6, "softmax_topk", True),      # DeepSeek router
+    (64, 128, 1, "sigmoid", False),          # Llama4 router
+    (100, 16, 4, "softmax_topk", False),     # padded T
+    (512, 128, 8, "softmax_topk", True),     # Qwen3-30B router
+])
+def test_gating(T, E, k, rt, renorm):
+    lg = jnp.asarray(RNG.standard_normal((T, E)) * 2, jnp.float32)
+    g1, i1 = gating(lg, k, router_type=rt, renormalize=renorm,
+                    block_t=64, interpret=True)
+    g2, i2 = gating_ref(lg, k, router_type=rt, renormalize=renorm)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-5)

@@ -1,0 +1,102 @@
+"""Residual-Based Prefetching (paper §4.2) and Workload-Aware Cache
+Replacement (paper §4.3) unit + property tests."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import (LRUCache, ScoreCache, StaticCache,
+                              WorkloadAwareCache)
+from repro.core.prefetch import (FeaturePrefetcher, ResidualPrefetcher,
+                                 StatisticalPrefetcher, prefetch_accuracy,
+                                 top_workload_experts)
+from repro.models.config import MoEConfig
+
+
+def test_prefetch_accuracy_metric():
+    true = np.array([5, 0, 3, 0])
+    assert prefetch_accuracy(np.array([5, 0, 3, 0]), true, 2) == 1.0
+    assert prefetch_accuracy(np.array([0, 5, 0, 3]), true, 2) == 0.0
+    assert prefetch_accuracy(np.array([5, 9, 0, 0]), true, 2) == 0.5
+    # zero-workload experts don't count against the predictor
+    assert prefetch_accuracy(np.array([9, 0, 0, 0]),
+                             np.array([1, 0, 0, 0]), 2) == 1.0
+
+
+def test_residual_prefetcher_recovers_true_routing():
+    """If h + res_vec equals the next layer's true gate input, prediction
+    is exact — the mechanism the paper's Eq. 10-11 relies on."""
+    rng = np.random.default_rng(0)
+    d, E, T, k = 16, 8, 64, 2
+    m = MoEConfig(n_routed=E, top_k=k)
+    gws = [rng.standard_normal((d, E)) for _ in range(3)]
+    h0 = rng.standard_normal((T, d))
+    shift = rng.standard_normal(d) * 3.0
+    h1 = h0 + shift[None, :]              # exact constant residual
+    pf = ResidualPrefetcher(gws, [shift, np.zeros(d), np.zeros(d)], m)
+    pred = pf.predict(0, h0)
+    # true workload of layer 1
+    logits = h1 @ gws[1]
+    x = logits - logits.max(-1, keepdims=True)
+    p = np.exp(x) / np.exp(x).sum(-1, keepdims=True)
+    topk = np.argpartition(-p, k - 1, -1)[:, :k]
+    true = np.bincount(topk.reshape(-1), minlength=E)
+    assert prefetch_accuracy(pred, true, 3) == 1.0
+    # the raw-feature (HybriMoE) predictor is strictly worse here
+    fp = FeaturePrefetcher(gws, m)
+    assert prefetch_accuracy(fp.predict(0, h0), true, 3) <= 1.0
+
+
+def test_statistical_prefetcher_tracks_history():
+    pf = StatisticalPrefetcher(n_layers=3, n_experts=4)
+    for _ in range(10):
+        pf.observe(1, np.array([0, 5, 1, 0]))
+    pred = pf.predict(0, None)
+    assert list(top_workload_experts(pred, 1)) == [1]
+
+
+def test_workload_cache_window_semantics():
+    """Alg. 2: replacement only at w_size boundaries; scores reset."""
+    c = WorkloadAwareCache(4, 2, w_size=3, u_size=1, seed=0)
+    initial = set(c.resident_set())
+    heavy = [e for e in range(4) if e not in initial][0]
+    w = np.zeros(4)
+    w[heavy] = 10
+    assert c.observe(w) == 0              # tick 1: no boundary
+    assert set(c.resident_set()) == initial
+    assert c.observe(w) == 0              # tick 2
+    swaps = c.observe(w)                  # tick 3: boundary -> swap in
+    assert swaps == 1
+    assert heavy in set(c.resident_set())
+    assert np.all(c.scores == 0)          # reset after window
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(4, 32), st.integers(1, 8), st.integers(0, 1000))
+def test_workload_cache_converges_to_hot_set(E, csize, seed):
+    csize = min(csize, E - 1)
+    rng = np.random.default_rng(seed)
+    hot = rng.choice(E, csize, replace=False)
+    c = WorkloadAwareCache(E, csize, w_size=2, u_size=csize, seed=seed)
+    for _ in range(20):
+        w = rng.poisson(0.2, E).astype(float)
+        w[hot] += 10
+        c.observe(w)
+    assert set(c.resident_set()) == set(hot)
+
+
+def test_lru_and_score_caches():
+    lru = LRUCache(4, 2, seed=0)
+    for e in [0, 1, 2, 3, 0]:
+        w = np.zeros(4)
+        w[e] = 1
+        lru.observe(w)
+    assert 0 in set(lru.resident_set())   # most recently used stays
+
+    sc = ScoreCache(4, 2, seed=0)
+    for _ in range(8):
+        sc.observe(np.array([9.0, 0, 0, 8.0]))
+    assert set(sc.resident_set()) == {0, 3}
+
+    st_ = StaticCache(4, 2, seed=0)
+    before = set(st_.resident_set())
+    st_.observe(np.array([9.0, 9, 9, 9]))
+    assert set(st_.resident_set()) == before

@@ -1,0 +1,90 @@
+"""Sharding-spec derivation unit tests (pure logic; the real multi-device
+lowering is exercised by launch/dryrun.py — see EXPERIMENTS.md §Dry-run)."""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, make_smoke
+from repro.launch.costs import step_cost
+from repro.launch.hloparse import (collective_traffic, shape_bytes,
+                                   split_computations, trip_count)
+from repro.launch.sharding import (estimate_params, fit_spec,
+                                   weights_need_fsdp)
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+
+
+def test_fit_spec_drops_nondividing():
+    assert fit_spec(P("model", None), (50280, 64), MESH) == P(None, None)
+    assert fit_spec(P("model", None), (50304, 64), MESH) == P("model", None)
+    assert fit_spec(P(("data", "model"), None), (256, 4), MESH) == \
+        P(("data", "model"), None)
+    assert fit_spec(P(("data", "model"), None), (128, 4), MESH) == \
+        P(None, None)
+
+
+def test_param_count_estimates():
+    # olmo-1b ~ 1.2B params (tied embeddings)
+    n = estimate_params(get_config("olmo_1b"))
+    assert 0.9e9 < n < 1.6e9
+    # llama3-405b within 10%
+    n = estimate_params(get_config("llama3_405b"))
+    assert 3.6e11 < n < 4.5e11
+    # mixtral ~47B
+    n = estimate_params(get_config("mixtral_8x7b"))
+    assert 4.2e10 < n < 5.2e10
+
+
+def test_fsdp_decision():
+    assert not weights_need_fsdp(get_config("olmo_1b"), MESH)
+    assert weights_need_fsdp(get_config("llama3_405b"), MESH)
+    assert weights_need_fsdp(get_config("mixtral_8x7b"), MESH, train=True)
+    assert not weights_need_fsdp(get_config("mixtral_8x7b"), MESH,
+                                 train=False)
+
+
+def test_step_cost_sane():
+    cfg = get_config("mixtral_8x7b")
+    dec = step_cost(cfg, "decode", 32768, 128)
+    pre = step_cost(cfg, "prefill", 32768, 32)
+    # decode flops per token far below prefill total
+    assert dec.flops < pre.flops
+    # decode reads all expert weights (our dense dispatch) + KV
+    assert dec.param_bytes > 80e9           # ~94 GB of weights
+    assert dec.kv_bytes > 0
+
+
+def test_hlo_parsers():
+    assert shape_bytes("bf16[2,128]") == 2 * 128 * 2
+    assert shape_bytes("(f32[4,4], s32[2])") == 64 + 8
+    hlo = """
+cond_comp {
+  %c = s32[] constant(9)
+  ROOT %lt = pred[] compare(%p, %c), direction=LT
+}
+
+body_comp {
+  %ar = f32[128,256] all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %t = (f32[128,256]) tuple(%ar)
+}
+
+ENTRY main {
+  %w = (s32[], f32[128,256]) while(%init), condition=cond_comp, body=body_comp
+  ROOT %r = f32[128,256] get-tuple-element(%w), index=1
+}
+"""
+    comps = split_computations(hlo)
+    assert trip_count(comps["cond_comp"]) == 9
+    traffic = collective_traffic(hlo)
+    expect = 2 * (128 * 256 * 4) * (3 / 4) * 9     # all-reduce x 9 trips
+    np.testing.assert_allclose(traffic["total"], expect, rtol=1e-6)

@@ -1,0 +1,96 @@
+"""Offloading simulator invariants + cost-model sanity (paper §6
+methodology)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.cost_model import CostModel, LOCAL_PC, TPU_V5E_HOST
+from repro.core.simulator import (FrameworkSpec, nonmoe_time_per_step,
+                                  paper_frameworks, simulate)
+from repro.core.tracing import RoutingTrace
+from repro.configs import get_config, make_smoke
+
+
+def _toy_trace(cfg, n_steps=16, seed=0, skew=3.0):
+    """Synthetic routing trace with temporally-correlated hot experts."""
+    rng = np.random.default_rng(seed)
+    from repro.models.config import layer_pattern
+    L = sum(1 for _, m in layer_pattern(cfg) if m == "moe")
+    E = cfg.moe.n_routed
+    tr = RoutingTrace(cfg)
+    hot = rng.choice(E, max(1, E // 4), replace=False)
+    for t in range(n_steps):
+        if t % 8 == 7:      # slow drift of the hot set
+            hot = (hot + 1) % E
+        wls, gis, gss = [], [], []
+        for l in range(L):
+            w = rng.poisson(1.0, E).astype(np.int64)
+            w[hot] += rng.poisson(skew * 3, len(hot))
+            wls.append(w)
+            gis.append(rng.standard_normal((8, cfg.d_model),
+                                           ).astype(np.float32))
+            gss.append(w.astype(np.float64))
+        tr.workload.append(wls)
+        tr.gate_in.append(gis)
+        tr.gates_sum.append(gss)
+        tr.n_tokens = 8
+    return tr
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = make_smoke(get_config("mixtral_8x7b")).replace(n_layers=4)
+    cm = CostModel.for_config(get_config("mixtral_8x7b"), LOCAL_PC)
+    return cfg, cm, _toy_trace(cfg)
+
+
+def test_cost_model_shapes_and_monotonicity():
+    cm = CostModel.for_config(get_config("mixtral_8x7b"), LOCAL_PC)
+    w = np.array([0, 1, 4, 64, 256])
+    tc = cm.t_cpu(w)
+    assert tc[0] == 0 and np.all(np.diff(tc[1:]) >= 0)
+    # small-w CPU cost is DRAM-bound (flat), not FLOP-bound
+    assert abs(tc[1] - tc[2]) / tc[1] < 0.05
+    tg_miss = cm.t_gpu(w, np.zeros(5, bool))
+    tg_hit = cm.t_gpu(w, np.ones(5, bool))
+    assert np.all(tg_hit[1:] <= tg_miss[1:])
+    assert cm.trans_time > 0
+
+
+def test_greedy_beats_all_cpu_and_all_baselines_ordered(setup):
+    cfg, cm, tr = setup
+    naive = simulate(tr, cfg, cm, FrameworkSpec("naive", "all_cpu"))
+    greedy = simulate(tr, cfg, cm, FrameworkSpec("greedy", "greedy"))
+    assert greedy.tokens_per_s >= naive.tokens_per_s
+
+
+def test_dali_beats_hybrimoe_on_correlated_trace(setup):
+    cfg, cm, tr = setup
+    from repro.core.prefetch import (FeaturePrefetcher, ResidualPrefetcher,
+                                     StatisticalPrefetcher)
+    E = cfg.moe.n_routed
+    gws = [np.zeros((cfg.d_model, E))] * tr.n_moe_layers
+    res = [np.zeros(cfg.d_model)] * tr.n_moe_layers
+    pfs = {"residual": ResidualPrefetcher(gws, res, cfg.moe),
+           "feature": FeaturePrefetcher(gws, cfg.moe),
+           "statistical": StatisticalPrefetcher(tr.n_moe_layers, E)}
+    rs = {s.name: simulate(tr, cfg, cm, s, prefetchers=pfs, batch=8)
+          for s in paper_frameworks(cache_size=E // 2)}
+    assert rs["DALI"].tokens_per_s > rs["Fiddler"].tokens_per_s
+    assert rs["DALI"].cache_hit_rate >= rs["HybriMoE"].cache_hit_rate - 0.05
+
+
+def test_layerwise_has_no_pcie(setup):
+    cfg, cm, tr = setup
+    r = simulate(tr, cfg, cm,
+                 FrameworkSpec("lw", "layerwise", cache_size=4))
+    assert r.pcie_time_s == 0.0
+
+
+def test_nonmoe_time_scales_with_batch():
+    cfg = get_config("mixtral_8x7b")
+    cm = CostModel.for_config(cfg, TPU_V5E_HOST)
+    t1 = nonmoe_time_per_step(cfg, cm, batch=1, ctx_len=64)
+    t8 = nonmoe_time_per_step(cfg, cm, batch=8, ctx_len=64)
+    assert 7.5 < t8 / t1 < 8.5
