@@ -1,5 +1,6 @@
 """Render reports/dryrun/*.json into the EXPERIMENTS.md §Dry-run and
-§Roofline markdown tables.
+§Roofline markdown tables, and reports/serving/*.json (written by
+benchmarks/serving_throughput.py) into the §Serving table.
 
   PYTHONPATH=src python -m benchmarks.report_md > reports/roofline_tables.md
 """
@@ -12,6 +13,8 @@ from collections import defaultdict
 
 DRYRUN_DIR = os.path.normpath(os.path.join(
     os.path.dirname(__file__), "..", "reports", "dryrun"))
+SERVING_DIR = os.path.normpath(os.path.join(
+    os.path.dirname(__file__), "..", "reports", "serving"))
 
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 
@@ -82,6 +85,47 @@ def main():
             doms[r["roofline"]["dominant"]] += 1
     print("\nDominant-term distribution (single-pod):",
           dict(doms))
+
+    serving_section()
+
+
+def serving_section():
+    """§Serving: continuous batching vs wave under Poisson arrivals.
+
+    How to (re)generate a row:
+      PYTHONPATH=src python -m benchmarks.serving_throughput \
+          --arch mixtral-8x7b --requests 24 --batch 4 --rate 8
+
+    Reading the columns:
+      decode tok/s — emitted decode tokens / decode wall time.  Wave mode
+        loses it to pad-and-lockstep dead slots; continuous batching
+        refills freed slots every step, so occupancy (occ, mean live slots
+        per step) stays near the batch size.
+      TTFT p50/p99 — arrival to FIRST token.  Bounded by admission delay:
+        a wave admits only when the previous wave drains; continuous
+        batching admits as soon as any slot frees.
+      lat p50/p99 — arrival to LAST token; p99 is the tail a serving SLA
+        cares about and is dominated by queueing under bursty arrivals.
+    """
+    files = sorted(glob.glob(os.path.join(SERVING_DIR, "*.json")))
+    if not files:
+        return
+    print("\n### Serving throughput (Poisson arrivals, mixed lengths)\n")
+    print("| arch | server | decode tok/s | total tok/s | occ | "
+          "lat p50/p99 (s) | TTFT p50/p99 (s) | DALI hit% |")
+    print("|---|---|---|---|---|---|---|---|")
+    for f in files:
+        rec = json.load(open(f))
+        for kind in sorted(rec["servers"]):
+            r = rec["servers"][kind]
+            print(f"| {rec['arch']} | {kind} | {r['decode_tok_s']:.1f} "
+                  f"| {r['total_tok_s']:.1f} | {r['mean_occupancy']:.2f} "
+                  f"| {r['lat_p50_s']:.2f}/{r['lat_p99_s']:.2f} "
+                  f"| {r['ttft_p50_s']:.2f}/{r['ttft_p99_s']:.2f} "
+                  f"| {100 * r['dali_hit_rate']:.1f} |")
+    print("\n(decode tok/s: emitted decode tokens per decode-wall-second; "
+          "TTFT: arrival to first token — see benchmarks/report_md.py "
+          "serving_section docstring for interpretation.)")
 
 
 if __name__ == "__main__":

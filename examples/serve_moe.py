@@ -1,7 +1,20 @@
 """End-to-end driver (the paper's regime): serve a small MoE with batched
-requests through the wave scheduler, DALI engine on, telemetry reported.
+requests, DALI engine on, telemetry reported.
 
   PYTHONPATH=src python examples/serve_moe.py [--arch deepseek-v2-lite-16b]
+
+By default requests flow through the slot-level continuous-batching server
+(admission into freed slots every step, per-slot positions, per-request
+TTFT); pass ``--server wave`` for the historical wave scheduler baseline.
+
+To compare the two under a mixed-length Poisson arrival process — decode
+tok/s, p50/p99 latency and TTFT side by side — run the serving benchmark:
+
+  PYTHONPATH=src python -m benchmarks.serving_throughput \
+      --arch mixtral-8x7b --requests 24 --batch 4 --rate 8
+
+(see benchmarks/serving_throughput.py for how to read the columns, and
+DESIGN.md §3 for the architecture).
 
 Thin wrapper over repro.launch.serve with example defaults.
 """

@@ -1,19 +1,48 @@
-"""Minimal dependency-free pytree checkpointer (msgpack + zstd).
+"""Minimal dependency-free pytree checkpointer (msgpack + zstd/zlib).
 
 Stores any pytree of jnp/np arrays with dtype/shape metadata; restores to
 numpy (caller device_puts / reshards as needed).  Atomic writes via a temp
 file + rename; keeps the latest K checkpoints.
+
+Compression uses ``zstandard`` when installed and falls back to stdlib
+``zlib`` otherwise; a 4-byte magic prefix records the codec so either
+build can restore the other's checkpoints (legacy unprefixed files are
+assumed zstd).
 """
 from __future__ import annotations
 
 import os
 import re
+import zlib
 from typing import Any, Optional
 
 import jax
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+except ImportError:                      # clean env: stdlib fallback
+    zstd = None
+
+_MAGIC_ZSTD = b"RZS1"
+_MAGIC_ZLIB = b"RZL1"
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstd is not None:
+        return _MAGIC_ZSTD + zstd.ZstdCompressor(level=3).compress(raw)
+    return _MAGIC_ZLIB + zlib.compress(raw, 6)
+
+
+def _decompress(blob: bytes) -> bytes:
+    if blob[:4] == _MAGIC_ZLIB:
+        return zlib.decompress(blob[4:])
+    body = blob[4:] if blob[:4] == _MAGIC_ZSTD else blob   # legacy: raw zstd
+    if zstd is None:
+        raise RuntimeError(
+            "checkpoint is zstd-compressed but zstandard is not installed")
+    return zstd.ZstdDecompressor().decompress(body)
 
 
 def _pack_leaf(x):
@@ -38,7 +67,7 @@ def save(path: str, tree: Any) -> None:
     payload = {"leaves": [_pack_leaf(x) for x in leaves],
                "treedef": str(treedef)}
     raw = msgpack.packb(payload, use_bin_type=True)
-    blob = zstd.ZstdCompressor(level=3).compress(raw)
+    blob = _compress(raw)
     tmp = path + ".tmp"
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     with open(tmp, "wb") as f:
@@ -48,7 +77,7 @@ def save(path: str, tree: Any) -> None:
 
 def restore(path: str, like: Any) -> Any:
     with open(path, "rb") as f:
-        raw = zstd.ZstdDecompressor().decompress(f.read())
+        raw = _decompress(f.read())
     payload = msgpack.unpackb(raw, raw=False)
     leaves = [_unpack_leaf(d) for d in payload["leaves"]]
     _, treedef = jax.tree.flatten(like)

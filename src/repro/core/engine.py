@@ -90,9 +90,13 @@ def _t_gpu(w, resident, dcfg: DaliConfig):
 
 
 def predict_next_workload(gate_in_prev, res_vec_prev, router, top_k: int,
-                          router_type: str = "softmax_topk"):
+                          router_type: str = "softmax_topk",
+                          token_mask=None):
     """Eq. 10: workload prediction for THIS layer from the PREVIOUS layer's
-    residual-corrected gate input.  gate_in_prev (T,d), router (d,E)."""
+    residual-corrected gate input.  gate_in_prev (T,d), router (d,E).
+
+    ``token_mask`` (T,) bool drops tokens from retired/empty slots so a
+    partially-occupied continuous batch predicts only real traffic."""
     h = gate_in_prev.astype(jnp.float32) + res_vec_prev[None, :]
     logits = h @ router
     if router_type == "sigmoid":
@@ -101,7 +105,10 @@ def predict_next_workload(gate_in_prev, res_vec_prev, router, top_k: int,
         scores = jax.nn.softmax(logits, axis=-1)
     _, idx = jax.lax.top_k(scores, top_k)
     E = router.shape[1]
-    return jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.int32), axis=(0, 1))
+    oh = jax.nn.one_hot(idx, E, dtype=jnp.int32)              # (T, k, E)
+    if token_mask is not None:
+        oh = oh * token_mask.astype(jnp.int32)[:, None, None]
+    return jnp.sum(oh, axis=(0, 1))
 
 
 def _cache_update(resident, scores, w, do_update, dcfg: DaliConfig):
@@ -129,12 +136,15 @@ def _cache_update(resident, scores, w, do_update, dcfg: DaliConfig):
 
 def dali_schedule(state, workloads, gate_in, routers, res_vecs,
                   dcfg: DaliConfig, top_k: int,
-                  router_type: str = "softmax_topk"):
+                  router_type: str = "softmax_topk", token_mask=None):
     """One serve step of DALI scheduling, fully jittable.
 
     workloads (L, E) int32; gate_in (L, T, d); routers (L, d, E);
     res_vecs (L, d) — res_vecs[l] corrects layer l's gate input to predict
-    layer l+1 (Eq. 11).  Returns (new_state, telemetry dict).
+    layer l+1 (Eq. 11).  ``token_mask`` (T,) bool restricts prefetch
+    prediction to live tokens (continuous batching: T = batch slots, only
+    some occupied; the caller is expected to pass workloads already masked
+    the same way).  Returns (new_state, telemetry dict).
     """
     L, E = workloads.shape
     w = workloads.astype(jnp.float32)
@@ -142,7 +152,8 @@ def dali_schedule(state, workloads, gate_in, routers, res_vecs,
     # --- Residual-Based Prefetching: predictions for layers 1..L-1 --------
     def pf(l):
         return predict_next_workload(gate_in[l - 1], res_vecs[l - 1],
-                                     routers[l], top_k, router_type)
+                                     routers[l], top_k, router_type,
+                                     token_mask=token_mask)
     pf_pred = jnp.stack([jnp.zeros((E,), jnp.int32)]
                         + [pf(l) for l in range(1, L)])       # (L, E)
     pf_rank = jnp.argsort(-pf_pred, axis=-1)
@@ -182,3 +193,57 @@ def dali_schedule(state, workloads, gate_in, routers, res_vecs,
         "step_moe_time": jnp.sum(jnp.maximum(T_cpu, T_gpu)),
     }
     return new_state, telemetry
+
+
+def masked_workloads(topk_idx, n_experts: int, token_mask):
+    """Per-expert token counts from per-token routing choices, restricted
+    to live slots.  topk_idx (L, T, K) int32, token_mask (T,) bool ->
+    (L, E) int32.  This is what makes DALI's scheduling see the *actual*
+    per-step token mix under continuous batching instead of counting
+    garbage tokens decoded in retired/empty slots."""
+    oh = jax.nn.one_hot(topk_idx, n_experts, dtype=jnp.int32)  # (L,T,K,E)
+    oh = oh * token_mask.astype(jnp.int32)[None, :, None, None]
+    return jnp.sum(oh, axis=(1, 2))
+
+
+@dataclass
+class TelemetryAggregator:
+    """Host-side accumulator for per-step DALI telemetry across a serve
+    run whose batch composition changes every step (continuous batching).
+    One ``update`` per decode step; ``n_active`` is the number of live
+    slots that step, so occupancy-weighted estimates stay faithful."""
+    steps: int = 0
+    moe_time_est: float = 0.0
+    link_time_est: float = 0.0
+    hits: int = 0
+    misses: int = 0
+    swaps: int = 0
+    active_tokens: int = 0
+
+    def update(self, tel, n_active=None):
+        if not tel:
+            return
+        self.steps += 1
+        self.moe_time_est += float(tel["step_moe_time"])
+        self.link_time_est += float(jnp.sum(tel["link_seconds"]))
+        self.hits += int(jnp.sum(tel["hits"]))
+        self.misses += int(jnp.sum(tel["misses"]))
+        self.swaps += int(jnp.sum(tel["swaps"]))
+        if n_active is not None:
+            self.active_tokens += int(n_active)
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def summary(self) -> str:
+        # occupancy is the server's to report (ServeMetrics.mean_occupancy
+        # — it also covers DALI-off steps this aggregator never sees)
+        if not self.steps:
+            return ""
+        return (f"DALI est: moe={self.moe_time_est:.3f}s "
+                f"link={self.link_time_est:.3f}s "
+                f"hit%={100 * self.hit_rate():.1f}")

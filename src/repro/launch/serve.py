@@ -1,12 +1,17 @@
-"""Serving launcher: batch server with DALI offloading enabled.
+"""Serving launcher: continuous-batching (or wave compat) server with DALI
+offloading enabled.
 
 Real run at smoke scale (CPU): trains briefly (or loads a checkpoint),
 calibrates the residual vectors on Wikitext-stand-in synthetic data, then
 serves a batch of requests with the in-graph DALI engine and reports
-scheduling telemetry.
+scheduling telemetry, per-request latency and TTFT.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
-      --requests 16 --max-new 32
+      --requests 16 --max-new 32 --server continuous
+
+``--server wave`` selects the historical wave scheduler (equal-padded
+waves, lockstep decode) — the compat baseline the serving benchmark
+compares against; see DESIGN.md §3.
 """
 from __future__ import annotations
 
@@ -23,11 +28,13 @@ def main():
     from repro.core.tracing import capture_decode_trace
     from repro.data.pipeline import MarkovCorpus
     from repro.launch.train import train_loop
-    from repro.serving.scheduler import BatchServer, Request
+    from repro.serving.scheduler import SERVER_PRESETS, Request, make_server
     from repro.serving.steps import default_dali_config
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--server", default="continuous",
+                    choices=sorted(SERVER_PRESETS))
     ap.add_argument("--train-steps", type=int, default=120)
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--batch", type=int, default=8)
@@ -58,7 +65,7 @@ def main():
         res_vecs = jnp.asarray(np.stack(res))
         dali_cfg = default_dali_config(cfg, cache_ratio=args.cache_ratio)
 
-    server = BatchServer(params, cfg, batch_size=args.batch,
+    server = make_server(args.server, params, cfg, batch_size=args.batch,
                          max_len=args.prompt_len + args.max_new + 2,
                          dali_cfg=dali_cfg, res_vecs=res_vecs)
     rng = np.random.default_rng(args.seed + 2)
@@ -67,10 +74,13 @@ def main():
                               prompt=corpus.sample(rng, args.prompt_len),
                               max_new_tokens=args.max_new))
     done = server.run()
-    lat = [r.done_at - r.submitted_at for r in done]
-    print(f"== served {len(done)} requests | {server.metrics.summary()}")
+    lat = [r.latency for r in done]
+    ttft = [r.ttft for r in done if r.first_token_at]
+    print(f"== served {len(done)} requests via {args.server} | "
+          f"{server.metrics.summary()}")
     print(f"   latency p50={np.percentile(lat, 50):.2f}s "
-          f"p95={np.percentile(lat, 95):.2f}s")
+          f"p95={np.percentile(lat, 95):.2f}s"
+          + (f" | ttft p50={np.percentile(ttft, 50):.2f}s" if ttft else ""))
 
 
 if __name__ == "__main__":

@@ -5,13 +5,23 @@ encoder-decoder).
 Cache convention
 ----------------
 A cache is a dict pytree per layer slot:
-  GQA:   {"k": (B, S_c, Hkv, D), "v": (B, S_c, Hkv, D), "pos": (S_c,) int32}
-  MLA:   {"ckv": (B, S_c, R), "kpe": (B, S_c, Dr), "pos": (S_c,) int32}
+  GQA:   {"k": (B, S_c, Hkv, D), "v": (B, S_c, Hkv, D), "pos": (B, S_c)}
+  MLA:   {"ckv": (B, S_c, R), "kpe": (B, S_c, Dr), "pos": (B, S_c)}
   cross: {"k": (B, T_src, Hkv, D), "v": ...}   (static; built at prefill)
-``pos`` holds the absolute token position stored in each slot (-1 = empty);
-sliding-window layers use a rolling buffer (slot = pos % window) and the
-mask is derived purely from ``pos``, so one code path serves full, rolling,
-prefill and decode cases.
+``pos`` holds, per batch row, the absolute token position stored in each
+slot (-1 = empty); sliding-window layers use a rolling buffer (slot =
+pos % window) and the mask is derived purely from ``pos``, so one code
+path serves full, rolling, prefill and decode cases.
+
+Position convention (continuous batching, DESIGN.md §3)
+-------------------------------------------------------
+``positions`` is either ``(S,)`` — shared across the batch (training,
+prefill, wave-synchronised decode) — or ``(B, S)`` — per-slot offsets, the
+continuous-batching decode case where every slot sits at its own sequence
+position.  Shared positions keep the cheap contiguous
+``dynamic_update_slice`` cache-write path; per-slot positions use a per-row
+scatter.  Masks are always computed per batch row from the cache's ``pos``
+rows, so both conventions share one attention code path.
 """
 from __future__ import annotations
 
@@ -77,9 +87,26 @@ BLOCKWISE_KV_THRESHOLD = 4096
 BLOCKWISE_KV_BLOCK = 1024
 
 
+def _pos_rows(pos):
+    """Normalise a position vector to per-row form (Bm, S), Bm in {1, B}."""
+    return pos if pos.ndim == 2 else pos[None]
+
+
+def _attn_mask(q_pos, k_pos, *, causal: bool, window: int):
+    """Validity mask (Bm, Sq, Sk) from per-row positions; Bm broadcasts."""
+    qp = _pos_rows(q_pos)[:, :, None]          # (Bq, Sq, 1)
+    kp = _pos_rows(k_pos)[:, None, :]          # (Bk, 1, Sk)
+    valid = kp >= 0
+    if causal:
+        valid = valid & (kp <= qp)
+    if window:
+        valid = valid & (kp > qp - window)
+    return valid
+
+
 def _mha(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
          softcap: float, scale: float):
-    """q: (B,Sq,Hq,D)  k/v: (B,Sk,Hkv,D)  pos: (Sq,), (Sk,) int32."""
+    """q: (B,Sq,Hq,D)  k/v: (B,Sk,Hkv,D)  pos: (Sq,)|(B,Sq), (Sk,)|(B,Sk)."""
     # blockwise only pays when Sq x Sk scores would blow memory; decode
     # (Sq==1) keeps the dense path, which cooperates with sequence-sharded
     # KV (softmax over the sharded axis -> GSPMD all-reduce).
@@ -94,12 +121,8 @@ def _mha(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
                    k.astype(jnp.float32)) * scale
     if softcap:
         s = softcap * jnp.tanh(s / softcap)
-    valid = (k_pos >= 0)[None, :]
-    if causal:
-        valid = valid & (k_pos[None, :] <= q_pos[:, None])
-    if window:
-        valid = valid & (k_pos[None, :] > q_pos[:, None] - window)
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    valid = _attn_mask(q_pos, k_pos, causal=causal, window=window)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
     Dv = v.shape[-1]            # may differ from q head_dim (MLA)
@@ -123,13 +146,14 @@ def _mha_blockwise(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
     # traffic on 32k prefill — EXPERIMENTS.md §Perf/qwen3-30b iteration 3)
     k = hint(k, "batch", "seq", "kv_heads", "head_dim")
     v = hint(v, "batch", "seq", "kv_heads", "head_dim")
+    q_pos, k_pos = _pos_rows(q_pos), _pos_rows(k_pos)
     Sq_full = q.shape[1]
     qc = BLOCKWISE_Q_CHUNK
     if Sq_full > qc and Sq_full % qc == 0:
         nq = Sq_full // qc
         qs = q.reshape(q.shape[0], nq, qc, *q.shape[2:]).transpose(
             1, 0, 2, 3, 4)
-        qps = q_pos.reshape(nq, qc)
+        qps = q_pos.reshape(q_pos.shape[0], nq, qc).transpose(1, 0, 2)
         out = jax.lax.map(
             lambda args: _mha_blockwise_inner(
                 args[0], k, v, args[1], k_pos, causal=causal, window=window,
@@ -151,15 +175,16 @@ def _mha_blockwise_inner(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
     f32 = jnp.float32
     qg = q.reshape(B, Sq, Hkv, G, D).astype(f32)
 
+    q_pos, k_pos = _pos_rows(q_pos), _pos_rows(k_pos)
     pad = (-Sk) % block
     if pad:
         zp = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
         k, v = zp(k), zp(v)
-        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-1)
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
     nb = (Sk + pad) // block
     kb = k.reshape(B, nb, block, Hkv, D).transpose(1, 0, 2, 3, 4)
     vb = v.reshape(B, nb, block, Hkv, Dv).transpose(1, 0, 2, 3, 4)
-    pb = k_pos.reshape(nb, block)
+    pb = k_pos.reshape(k_pos.shape[0], nb, block).transpose(1, 0, 2)
 
     def body(carry, blk):
         m, l, acc = carry
@@ -167,12 +192,8 @@ def _mha_blockwise_inner(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
         s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kblk.astype(f32)) * scale
         if softcap:
             s = softcap * jnp.tanh(s / softcap)
-        valid = (kp >= 0)[None, :]
-        if causal:
-            valid = valid & (kp[None, :] <= q_pos[:, None])
-        if window:
-            valid = valid & (kp[None, :] > q_pos[:, None] - window)
-        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        valid = _attn_mask(q_pos, kp, causal=causal, window=window)
+        s = jnp.where(valid[:, None, None], s, NEG_INF)
         m_new = jnp.maximum(m, s.max(-1))
         corr = jnp.exp(m - m_new)
         p = jnp.exp(s - m_new[..., None])
@@ -199,15 +220,38 @@ def _write_buf(buf, new, start):
     return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype), idx)
 
 
+def _update_pos_rows(pos_buf, positions, start):
+    """Write shared ``positions`` (S,) into every row of (B, S_c) ``pos_buf``
+    from rolling slot ``start % S_c``."""
+    B, S_c = pos_buf.shape
+    rows = jnp.broadcast_to(positions[None], (B, positions.shape[0]))
+    return jax.lax.dynamic_update_slice(
+        pos_buf, rows.astype(pos_buf.dtype),
+        (jnp.zeros((), jnp.int32), start % S_c))
+
+
 def _update_cache(cache, new_k, new_v, positions):
-    """Write new tokens into the cache.  Writes are contiguous from
-    positions[0]; slot = pos % S_c (identity for full-size caches, rolling
-    buffer for sliding-window caches allocated at window size).  Assumes the
-    new chunk does not itself wrap around the rolling buffer (true for
-    decode S=1 and for prefill into full-size caches).  A prefill longer
-    than a rolling buffer keeps only its last S_c tokens (sliding-window
-    semantics)."""
+    """Write new tokens into the cache.
+
+    Shared positions (S,): writes are contiguous from positions[0]; slot =
+    pos % S_c (identity for full-size caches, rolling buffer for
+    sliding-window caches allocated at window size).  Assumes the new chunk
+    does not itself wrap around the rolling buffer (true for decode S=1 and
+    for prefill into full-size caches).  A prefill longer than a rolling
+    buffer keeps only its last S_c tokens (sliding-window semantics).
+
+    Per-slot positions (B, S): each row writes at its own rolling offset
+    via a per-row scatter (continuous-batching decode; S is small)."""
     S_cache = cache["k"].shape[1]
+    if positions.ndim == 2:
+        B = positions.shape[0]
+        slot = (positions % S_cache).astype(jnp.int32)          # (B, S)
+        b_idx = jnp.arange(B)[:, None]
+        k = cache["k"].at[b_idx, slot].set(new_k.astype(cache["k"].dtype))
+        v = cache["v"].at[b_idx, slot].set(new_v.astype(cache["v"].dtype))
+        pos = cache["pos"].at[b_idx, slot].set(
+            positions.astype(cache["pos"].dtype))
+        return {"k": k, "v": v, "pos": pos}
     if new_k.shape[1] > S_cache:
         new_k = new_k[:, -S_cache:]
         new_v = new_v[:, -S_cache:]
@@ -215,9 +259,7 @@ def _update_cache(cache, new_k, new_v, positions):
     start = positions[0].astype(jnp.int32)
     k = _write_buf(cache["k"], new_k, start)
     v = _write_buf(cache["v"], new_v, start)
-    S_c = cache["pos"].shape[0]
-    pos = jax.lax.dynamic_update_slice(
-        cache["pos"], positions.astype(cache["pos"].dtype), (start % S_c,))
+    pos = _update_pos_rows(cache["pos"], positions, start)
     return {"k": k, "v": v, "pos": pos}
 
 
@@ -241,9 +283,11 @@ def gqa_attention(params, x, cfg: ModelConfig, *, kind: str,
     if a.qk_norm:
         q = rms_norm_vec(params["q_norm"], q)
         k = rms_norm_vec(params["k_norm"], k)
-    cos, sin = rope_table(positions, hd, a.rope_theta)
-    q = apply_rope(q, cos[None], sin[None])
-    k = apply_rope(k, cos[None], sin[None])
+    # (Bm, S, D/2) tables: Bm=1 broadcasts for shared positions, Bm=B gives
+    # every slot its own rotary phase (continuous batching)
+    cos, sin = rope_table(_pos_rows(positions), hd, a.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
 
     window = a.sliding_window if kind == "attn_local" else 0
     scale = 1.0 / np.sqrt(hd)
@@ -287,16 +331,26 @@ def mla_attention(params, x, cfg: ModelConfig, *, positions, cache=None):
     ckv = rms_norm_vec(params["ckv_norm"], dkv[..., :R])       # (B,S,R)
     kpe = dkv[..., R:][:, :, None, :]                          # (B,S,1,rp)
 
-    cos, sin = rope_table(positions, rp, a.rope_theta)
-    q_pe = apply_rope(q_pe, cos[None], sin[None])
-    kpe = apply_rope(kpe, cos[None], sin[None])
+    cos, sin = rope_table(_pos_rows(positions), rp, a.rope_theta)
+    q_pe = apply_rope(q_pe, cos, sin)
+    kpe = apply_rope(kpe, cos, sin)
 
     if cache is not None:
-        start = positions[0].astype(jnp.int32)
-        ckv_b = _write_buf(cache["ckv"], ckv, start)
-        kpe_b = _write_buf(cache["kpe"], kpe[:, :, 0], start)
-        pos_b = jax.lax.dynamic_update_slice(
-            cache["pos"], positions.astype(cache["pos"].dtype), (start,))
+        S_c = cache["ckv"].shape[1]
+        if positions.ndim == 2:        # per-slot offsets: per-row scatter
+            slot = (positions % S_c).astype(jnp.int32)
+            b_idx = jnp.arange(B)[:, None]
+            ckv_b = cache["ckv"].at[b_idx, slot].set(
+                ckv.astype(cache["ckv"].dtype))
+            kpe_b = cache["kpe"].at[b_idx, slot].set(
+                kpe[:, :, 0].astype(cache["kpe"].dtype))
+            pos_b = cache["pos"].at[b_idx, slot].set(
+                positions.astype(cache["pos"].dtype))
+        else:
+            start = positions[0].astype(jnp.int32)
+            ckv_b = _write_buf(cache["ckv"], ckv, start)
+            kpe_b = _write_buf(cache["kpe"], kpe[:, :, 0], start)
+            pos_b = _update_pos_rows(cache["pos"], positions, start)
         cache = {"ckv": ckv_b, "kpe": kpe_b, "pos": pos_b}
         if S > 1:   # prefill: attend over fresh latents (see gqa_attention)
             ckv_all, kpe_all, k_pos = ckv, kpe, positions
@@ -320,8 +374,8 @@ def mla_attention(params, x, cfg: ModelConfig, *, positions, cache=None):
                            kpe_all[:, :, 0].astype(f32)
                            if kpe_all.ndim == 4 else kpe_all.astype(f32))
         s = s / np.sqrt(nope + rp)
-        valid = (k_pos >= 0) & (k_pos <= positions[:, None][0])
-        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        valid = _attn_mask(positions, k_pos, causal=True, window=0)
+        s = jnp.where(valid[:, None], s, NEG_INF)   # (Bm,1,Sq,S) vs (B,H,Sq,S)
         p = jax.nn.softmax(s, axis=-1)                         # (B,H,1,S)
         o_lat = jnp.einsum("bhqs,bsr->bqhr", p, ckv_f)         # (B,1,H,R)
         wuv = params["wuv"].reshape(R, H, vd)

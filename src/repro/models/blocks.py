@@ -137,11 +137,11 @@ def init_block_cache(cfg: ModelConfig, kinds, batch: int, max_len: int,
         m = a.mla
         c = {"ckv": jnp.zeros((batch, S_c, m.kv_lora_rank), dt),
              "kpe": jnp.zeros((batch, S_c, m.qk_rope_head_dim), dt),
-             "pos": jnp.full((S_c,), -1, jnp.int32)}
+             "pos": jnp.full((batch, S_c), -1, jnp.int32)}
     else:
         c = {"k": jnp.zeros((batch, S_c, a.n_kv_heads, hd), dt),
              "v": jnp.zeros((batch, S_c, a.n_kv_heads, hd), dt),
-             "pos": jnp.full((S_c,), -1, jnp.int32)}
+             "pos": jnp.full((batch, S_c), -1, jnp.int32)}
     if mixer_kind == "self_cross":
         T = n_cross or max_len
         c["xk"] = jnp.zeros((batch, T, a.n_heads, hd), dt)

@@ -89,10 +89,17 @@ def apply_encoder(params, src, cfg: ModelConfig):
 
 def apply_model(params, tokens, cfg: ModelConfig, *, positions=None,
                 caches=None, cross_src=None, moe_capacity=None,
-                trace: bool = False, last_logit_only: bool = False):
+                trace: bool = False, last_logit_only: bool = False,
+                logit_index=None):
     """tokens (B, S) int32.  Returns (logits, new_caches, infos) where infos
     is a list (prefix layers) + list (scan stacks, leaves stacked (n_super,
-    ...)) of MoE routing observables (None for non-MoE blocks)."""
+    ...)) of MoE routing observables (None for non-MoE blocks).
+
+    ``positions`` is (S,) shared across the batch, or (B, S) per-slot
+    offsets for continuous batching (see attention.py).  ``logit_index``
+    (traced scalar) unembeds only that sequence position — the
+    prefill-on-admit path where the last *real* token of a right-padded
+    prompt sits at ``length - 1``, not at ``S - 1``."""
     prefix_pat, period_pat, n_super = scan_pattern(cfg)
     B, S = tokens.shape
     if positions is None:
@@ -138,7 +145,9 @@ def apply_model(params, tokens, cfg: ModelConfig, *, positions=None,
     x, (new_scan_caches, scan_infos) = jax.lax.scan(body, x, xs)
     infos.append(scan_infos)
 
-    if last_logit_only:
+    if logit_index is not None:
+        x = jax.lax.dynamic_slice_in_dim(x, logit_index, 1, axis=1)
+    elif last_logit_only:
         x = x[:, -1:]      # serving prefill: only the last position samples
     x = apply_norm(params["final_norm"], x, cfg)
     logits = hint(unembed(params["embed"], x, cfg), "batch", "seq", "vocab")

@@ -1,15 +1,28 @@
-"""Wave-based batch scheduler for the example server.
+"""Serving schedulers: slot-level continuous batching (default) and the
+wave-based compat preset.
 
-Requests are queued, grouped into fixed-size waves of equal (padded) prompt
-length, prefilled once, then decoded synchronously until every sequence in
-the wave hits EOS or its token budget.  Positions are synchronised across a
-wave (a documented simplification vs slot-level continuous batching: the
-model's cache API uses a shared position vector; per-slot admission is
-future work tracked in DESIGN.md).
+``ContinuousBatchServer`` keeps a slot table of ``batch_size`` independent
+sequences.  Every step it (1) admits queued requests into free slots —
+each admission is a B=1 right-padded prefill whose KV rows are inserted
+into the batch cache at the slot index (prefill-on-admit), (2) runs ONE
+batched decode step in which every slot sits at its own sequence position
+(per-slot positions, see models/attention.py), and (3) retires slots whose
+request hit EOS / its token budget / the cache horizon, freeing them for
+the next admission.  DALI scheduling telemetry (T_cpu/T_gpu estimates,
+cache hits, link seconds, paper §4) is aggregated per decode step under
+the changing batch composition — the time-varying token mix is exactly
+what workload-aware offloading is about (DESIGN.md §3).
 
-Reports per-request latency and aggregate prefill/decode throughput, plus
-DALI scheduling telemetry (estimated device times, cache hit rate, link
-traffic) when the engine is enabled.
+``BatchServer`` is the historical wave scheduler: requests are grouped
+into fixed waves of equal (left-padded) prompt length, prefilled once and
+decoded in lockstep until the whole wave drains.  It pads every request to
+the longest prompt in its wave and keeps slots of finished requests idle,
+so mixed-length traffic leaves throughput on the floor — kept as a stable
+baseline for tests, examples and the serving benchmark.
+
+Both servers respect ``Request.not_before`` (virtual arrival time) so the
+serving benchmark can drive them with the same Poisson arrival process,
+and both report per-request latency and TTFT.
 """
 from __future__ import annotations
 
@@ -22,10 +35,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import DaliConfig
+from repro.core.engine import DaliConfig, TelemetryAggregator
 from repro.models.config import ModelConfig
-from repro.serving.steps import (init_serve_state, make_decode_step,
-                                 make_prefill_step)
+from repro.models.model import init_caches
+from repro.serving.steps import (init_serve_state, make_admit_prefill,
+                                 make_admit_step, make_decode_step,
+                                 make_prefill_step, retire_slot)
 
 
 @dataclass
@@ -34,8 +49,18 @@ class Request:
     prompt: np.ndarray                  # (S,) int32
     max_new_tokens: int = 32
     submitted_at: float = 0.0
+    not_before: float = 0.0             # virtual arrival time (0 = now)
     output: List[int] = field(default_factory=list)
+    first_token_at: float = 0.0
     done_at: float = 0.0
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token_at - self.submitted_at
+
+    @property
+    def latency(self) -> float:
+        return self.done_at - self.submitted_at
 
 
 @dataclass
@@ -44,28 +69,82 @@ class ServeMetrics:
     decode_tokens: int = 0
     prefill_s: float = 0.0
     decode_s: float = 0.0
-    waves: int = 0
-    dali_moe_time_est: float = 0.0
-    dali_link_time_est: float = 0.0
-    dali_hits: int = 0
-    dali_lookups: int = 0
+    waves: int = 0                      # wave server: waves; cont.: unused
+    steps: int = 0                      # decode steps
+    occupancy_sum: int = 0              # live slots summed over steps
+    dali: TelemetryAggregator = field(default_factory=TelemetryAggregator)
+
+    # -- legacy accessors (pre-refactor field names) -----------------------
+    @property
+    def dali_moe_time_est(self) -> float:
+        return self.dali.moe_time_est
+
+    @property
+    def dali_link_time_est(self) -> float:
+        return self.dali.link_time_est
+
+    @property
+    def dali_hits(self) -> int:
+        return self.dali.hits
+
+    @property
+    def dali_lookups(self) -> int:
+        return self.dali.lookups
+
+    def mean_occupancy(self) -> float:
+        return self.occupancy_sum / self.steps if self.steps else 0.0
 
     def summary(self) -> str:
         pf = self.prefill_tokens / self.prefill_s if self.prefill_s else 0
         dc = self.decode_tokens / self.decode_s if self.decode_s else 0
-        s = (f"waves={self.waves} prefill={pf:.1f} tok/s "
-             f"decode={dc:.1f} tok/s")
-        if self.dali_lookups:
-            s += (f" | DALI est: moe={self.dali_moe_time_est:.3f}s "
-                  f"link={self.dali_link_time_est:.3f}s "
-                  f"hit%={100*self.dali_hits/self.dali_lookups:.1f}")
+        s = (f"steps={self.steps} prefill={pf:.1f} tok/s "
+             f"decode={dc:.1f} tok/s occ={self.mean_occupancy():.2f}")
+        if self.dali.lookups:
+            s += " | " + self.dali.summary()
         return s
 
 
-class BatchServer:
+def _pop_arrived(queue: deque, now: float) -> Optional[Request]:
+    """FIFO pop of the head request iff its arrival time has passed
+    (queues are submitted in arrival order)."""
+    if queue and queue[0].not_before <= now:
+        return queue.popleft()
+    return None
+
+
+def _bucket_len(n: int, min_bucket: int, cap: int) -> int:
+    """Power-of-two padding bucket for prompt lengths: bounds the number of
+    distinct prefill compilations to O(log max_len) instead of one per
+    prompt length."""
+    b = min_bucket
+    while b < n:
+        b *= 2
+    return max(n, min(b, cap))
+
+
+# --------------------------------------------------------------------------
+# continuous batching
+# --------------------------------------------------------------------------
+
+class ContinuousBatchServer:
+    """Slot-level continuous batching with prefill-on-admit.
+
+    Request outputs INCLUDE the token sampled by the prefill (it is the
+    request's first token — TTFT refers to it) in BOTH servers, so the
+    serving benchmark compares identical definitions; ``max_new_tokens``
+    bounds the total generated tokens."""
+
     def __init__(self, params, cfg: ModelConfig, batch_size: int = 8,
                  max_len: int = 256, eos_id: int = 1,
-                 dali_cfg: Optional[DaliConfig] = None, res_vecs=None):
+                 dali_cfg: Optional[DaliConfig] = None, res_vecs=None,
+                 min_bucket: int = 16):
+        from repro.models.config import layer_pattern
+        if any(mixer == "mamba" for mixer, _ in layer_pattern(cfg)):
+            # attention masks hide right-pad slots (pos = -1); a recurrent
+            # SSM state has no such mask, so pad tokens would corrupt it
+            raise ValueError(
+                "continuous batching requires attention caches; serve "
+                "SSM/hybrid archs with the 'wave' preset")
         self.params = params
         self.cfg = cfg
         self.batch = batch_size
@@ -73,31 +152,174 @@ class BatchServer:
         self.eos = eos_id
         self.dali_cfg = dali_cfg
         self.res_vecs = res_vecs
+        self.min_bucket = min_bucket
+        self.queue: deque[Request] = deque()
+        self.metrics = ServeMetrics()
+        self._prefill = jax.jit(make_admit_prefill(cfg))
+        self._decode = jax.jit(make_decode_step(cfg, dali_cfg))
+        self._admit = jax.jit(make_admit_step(cfg))
+        # rolling (sliding-window) caches keep the LAST S_c positions of a
+        # prefill chunk; right-pad beyond the window would evict real prompt
+        # tokens, so such configs prefill at exact length (one compilation
+        # per distinct prompt length instead of per bucket)
+        a = cfg.attn
+        self._exact_prefill = bool(
+            a is not None and a.sliding_window
+            and a.sliding_window < max_len)
+        # immutable zero template reused by every admission prefill
+        self._fresh_caches = init_caches(cfg, 1, max_len)
+
+    def submit(self, req: Request):
+        if not req.submitted_at:
+            req.submitted_at = req.not_before or time.perf_counter()
+        assert len(req.prompt) < self.max_len, \
+            f"prompt of {len(req.prompt)} tokens exceeds max_len={self.max_len}"
+        self.queue.append(req)
+
+    def _admit_request(self, state, req: Request, slot: int):
+        t0 = time.perf_counter()
+        L = len(req.prompt)
+        Sb = L if self._exact_prefill else \
+            _bucket_len(L, self.min_bucket, self.max_len)
+        toks = np.zeros((1, Sb), np.int32)
+        toks[0, :L] = req.prompt                     # RIGHT-pad (see steps)
+        first_tok, fresh = self._prefill(self.params, jnp.asarray(toks),
+                                         self._fresh_caches,
+                                         jnp.asarray(L, jnp.int32))
+        state = self._admit(state, fresh, first_tok,
+                            jnp.asarray(slot, jnp.int32),
+                            jnp.asarray(L, jnp.int32))
+        jax.block_until_ready(state["tokens"])
+        t1 = time.perf_counter()
+        self.metrics.prefill_s += t1 - t0
+        self.metrics.prefill_tokens += L
+        req.output.append(int(np.asarray(first_tok)[0, 0]))
+        req.first_token_at = t1
+        return state
+
+    def _should_retire(self, req: Request) -> bool:
+        return (req.output[-1] == self.eos
+                or len(req.output) >= req.max_new_tokens
+                or len(req.prompt) + len(req.output) >= self.max_len)
+
+    def run(self) -> List[Request]:
+        B = self.batch
+        finished: List[Request] = []
+        state = init_serve_state(self.cfg, B, self.max_len,
+                                 dali_cfg=self.dali_cfg, per_slot=True)
+        slot_req: List[Optional[Request]] = [None] * B
+
+        while self.queue or any(slot_req):
+            now = time.perf_counter()
+            # -- admission: fill freed slots from the queue ----------------
+            for slot in range(B):
+                if slot_req[slot] is not None:
+                    continue
+                req = _pop_arrived(self.queue, now)
+                if req is None:
+                    break
+                state = self._admit_request(state, req, slot)
+                if self._should_retire(req):         # EOS on first token
+                    req.done_at = req.first_token_at
+                    finished.append(req)
+                    state = retire_slot(state, slot)
+                else:
+                    slot_req[slot] = req
+
+            busy = [i for i in range(B) if slot_req[i] is not None]
+            if not busy:
+                if not self.queue:
+                    break
+                time.sleep(max(0.0,
+                               self.queue[0].not_before - time.perf_counter()))
+                continue
+
+            # -- one decode step over the whole slot table -----------------
+            t0 = time.perf_counter()
+            state, _, tel = self._decode(self.params, state, self.res_vecs)
+            toks = np.asarray(state["tokens"])[:, 0]
+            t1 = time.perf_counter()
+
+            # single per-slot "emitted this step" count: every live slot
+            # contributes exactly one token (no re-derivation, no double
+            # counting of a request's final token)
+            emitted = len(busy)
+            for i in busy:
+                r = slot_req[i]
+                r.output.append(int(toks[i]))
+                if self._should_retire(r):
+                    r.done_at = t1
+                    finished.append(r)
+                    slot_req[i] = None
+                    state = retire_slot(state, i)
+            self.metrics.decode_tokens += emitted
+            self.metrics.decode_s += t1 - t0
+            self.metrics.steps += 1
+            self.metrics.occupancy_sum += emitted
+            self.metrics.dali.update(tel, n_active=emitted)
+        return finished
+
+
+# --------------------------------------------------------------------------
+# wave-based compat preset
+# --------------------------------------------------------------------------
+
+class BatchServer:
+    """Wave scheduler (compat preset): equal-padded waves decoded in
+    lockstep.  See module docstring; prefer ContinuousBatchServer."""
+
+    def __init__(self, params, cfg: ModelConfig, batch_size: int = 8,
+                 max_len: int = 256, eos_id: int = 1,
+                 dali_cfg: Optional[DaliConfig] = None, res_vecs=None,
+                 min_bucket: int = 16):
+        self.params = params
+        self.cfg = cfg
+        self.batch = batch_size
+        self.max_len = max_len
+        self.eos = eos_id
+        self.dali_cfg = dali_cfg
+        self.res_vecs = res_vecs
+        self.min_bucket = min_bucket
         self.queue: deque[Request] = deque()
         self.metrics = ServeMetrics()
         self._prefill = jax.jit(make_prefill_step(cfg, max_len))
         self._decode = jax.jit(make_decode_step(cfg, dali_cfg))
 
     def submit(self, req: Request):
-        req.submitted_at = time.perf_counter()
+        if not req.submitted_at:
+            req.submitted_at = req.not_before or time.perf_counter()
         self.queue.append(req)
 
     def run(self) -> List[Request]:
         finished: List[Request] = []
         while self.queue:
-            wave = [self.queue.popleft()
-                    for _ in range(min(self.batch, len(self.queue)))]
+            now = time.perf_counter()
+            wave = []
+            while len(wave) < self.batch:
+                req = _pop_arrived(self.queue, now)
+                if req is None:
+                    break
+                wave.append(req)
+            if not wave:        # next request hasn't "arrived" yet
+                time.sleep(max(0.0,
+                               self.queue[0].not_before - time.perf_counter()))
+                continue
             finished.extend(self._run_wave(wave))
         return finished
 
     # -- internals ---------------------------------------------------------
     def _run_wave(self, wave: List[Request]) -> List[Request]:
         B = self.batch
-        S = max(len(r.prompt) for r in wave)
+        S_raw = max(len(r.prompt) for r in wave)
+        budget = max(r.max_new_tokens for r in wave)
+        # bucketed wave length bounds prefill compilations across waves,
+        # but never at the cost of decode budget: the bucket is capped so
+        # S + budget still fits the KV horizon whenever S_raw would
+        S = _bucket_len(S_raw, self.min_bucket,
+                        max(S_raw, self.max_len - budget - 1))
         prompts = np.zeros((B, S), np.int32)
         for i, r in enumerate(wave):
             prompts[i, S - len(r.prompt):] = r.prompt   # left-pad
-        budget = max(r.max_new_tokens for r in wave)
 
         state = init_serve_state(self.cfg, B, self.max_len,
                                  dali_cfg=self.dali_cfg)
@@ -105,33 +327,46 @@ class BatchServer:
         tok, caches = self._prefill(self.params, jnp.asarray(prompts),
                                     state["caches"])
         tok.block_until_ready()
-        self.metrics.prefill_s += time.perf_counter() - t0
+        t_pf = time.perf_counter()
+        self.metrics.prefill_s += t_pf - t0
         self.metrics.prefill_tokens += B * S
         state = dict(state, tokens=tok, caches=caches,
                      pos=jnp.asarray(S, jnp.int32))
 
+        # the prefill samples each request's FIRST token (same definition
+        # as the continuous server, so the serving benchmark compares like
+        # with like: outputs include it, TTFT points at it)
+        toks0 = np.asarray(tok)[:, 0]
         live = np.array([i < len(wave) for i in range(B)])
+        for i, r in enumerate(wave):
+            if live[i]:
+                r.output.append(int(toks0[i]))
+                r.first_token_at = t_pf
+                if toks0[i] == self.eos or len(r.output) >= r.max_new_tokens:
+                    live[i] = False
+                    r.done_at = t_pf
         t0 = time.perf_counter()
         for _ in range(min(budget, self.max_len - S - 1)):
+            if not live.any():        # whole wave done at/after prefill
+                break
+            # single per-slot "emitted this step" count: each slot live at
+            # the top of the step emits exactly one token (the fix for the
+            # old live.sum() + re-derived-final-token double count)
+            emitted = int(live.sum())
             state, logits, tel = self._decode(self.params, state,
                                               self.res_vecs)
             toks = np.asarray(state["tokens"])[:, 0]
+            t_step = time.perf_counter()
             for i, r in enumerate(wave):
                 if live[i]:
                     r.output.append(int(toks[i]))
                     if toks[i] == self.eos or len(r.output) >= r.max_new_tokens:
                         live[i] = False
-                        r.done_at = time.perf_counter()
-            self.metrics.decode_tokens += int(live.sum()) + \
-                sum(1 for i, r in enumerate(wave) if not live[i]
-                    and r.output and r.output[-1] == int(toks[i]))
-            if tel:
-                self.metrics.dali_moe_time_est += float(tel["step_moe_time"])
-                self.metrics.dali_link_time_est += float(
-                    jnp.sum(tel["link_seconds"]))
-                self.metrics.dali_hits += int(jnp.sum(tel["hits"]))
-                self.metrics.dali_lookups += int(jnp.sum(tel["hits"])
-                                                 + jnp.sum(tel["misses"]))
+                        r.done_at = t_step
+            self.metrics.decode_tokens += emitted
+            self.metrics.steps += 1
+            self.metrics.occupancy_sum += emitted
+            self.metrics.dali.update(tel, n_active=emitted)
             if not live.any():
                 break
         self.metrics.decode_s += time.perf_counter() - t0
@@ -140,3 +375,19 @@ class BatchServer:
             if not r.done_at:
                 r.done_at = time.perf_counter()
         return wave
+
+
+SERVER_PRESETS = {
+    "continuous": ContinuousBatchServer,
+    "wave": BatchServer,
+}
+
+
+def make_server(preset: str, params, cfg: ModelConfig, **kw):
+    """Factory over SERVER_PRESETS ('continuous' | 'wave')."""
+    try:
+        cls = SERVER_PRESETS[preset]
+    except KeyError:
+        raise ValueError(f"unknown server preset {preset!r}; "
+                         f"choose from {sorted(SERVER_PRESETS)}") from None
+    return cls(params, cfg, **kw)

@@ -3,7 +3,11 @@ scheduling for MoE architectures.
 
 The decode step is the unit the dry-run lowers for ``decode_32k`` /
 ``long_500k`` shapes: ONE new token against a KV cache of ``max_len``.
-All functions are pure and jit/pjit-friendly; state is an explicit pytree:
+All functions are pure and jit/pjit-friendly; state is an explicit pytree.
+
+Two serve-state layouts share the same decode step (DESIGN.md §3):
+
+wave (shared position — the compat preset)::
 
   ServeState = {
     "tokens":     (B, 1) int32   — last generated token per sequence
@@ -12,6 +16,18 @@ All functions are pure and jit/pjit-friendly; state is an explicit pytree:
     "dali":       DALI scheduler state (MoE archs with engine enabled)
     "rng":        PRNG key
   }
+
+per-slot (continuous batching)::
+
+  ServeState = {
+    "tokens":     (B, 1) int32
+    "pos":        (B,)   int32   — every slot at its own sequence offset
+    "active":     (B,)   bool    — live slots (admitted, not yet retired)
+    "caches" / "dali" / "rng" as above
+  }
+
+The decode step dispatches on ``state["pos"].ndim`` (static under jit), so
+one compiled function serves a batch whose composition changes every step.
 """
 from __future__ import annotations
 
@@ -21,7 +37,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import DaliConfig, dali_schedule, init_dali_state
+from repro.core.engine import (DaliConfig, dali_schedule, init_dali_state,
+                               masked_workloads)
 from repro.models.config import ModelConfig
 from repro.models.model import (apply_model, collect_field, init_caches,
                                 stack_routers)
@@ -47,16 +64,91 @@ def make_prefill_step(cfg: ModelConfig, max_len: int,
     return prefill
 
 
+def make_admit_prefill(cfg: ModelConfig,
+                       moe_capacity: Optional[int] = None):
+    """Prefill for admission into a continuous batch: the prompt arrives
+    RIGHT-padded to a bucket length, so positions 0..length-1 are real and
+    the first generated token samples from the logit at ``length - 1``
+    (identical to running the unpadded prompt alone — per-slot position
+    correctness).  Returns prefill(params, tokens (1,Sb), caches, length)
+    -> (next_token (1,1), caches).  Compiles once per bucket length."""
+
+    def prefill(params, tokens, caches, length):
+        S = tokens.shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        logits, caches, _ = apply_model(params, tokens, cfg,
+                                        positions=positions, caches=caches,
+                                        moe_capacity=moe_capacity,
+                                        logit_index=length - 1)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    return prefill
+
+
+def make_admit_step(cfg: ModelConfig):
+    """Returns admit(state, fresh_caches, first_tok, slot, length) -> state'
+    inserting a freshly-prefilled request (B=1 caches) into batch ``slot``.
+
+    Cache rows are written with dynamic_update_slice along the batch axis
+    (axis 0 for prefix blocks, axis 1 for scanned stacks whose leading axis
+    is the super-block).  ``pos`` rows are re-masked so cache slots holding
+    right-pad garbage (absolute position >= length) read as empty (-1) —
+    future decode masks then never attend to them.  ``slot`` and ``length``
+    are traced, so one compilation serves every admission."""
+
+    def admit(state, fresh_caches, first_tok, slot, length):
+        def ins(path, big, small):
+            axis = 1 if (hasattr(path[0], "key")
+                         and path[0].key == "scan") else 0
+            leaf = path[-1]
+            if hasattr(leaf, "key") and leaf.key == "pos":
+                small = jnp.where((small >= 0) & (small < length), small, -1)
+            idx = [jnp.zeros((), jnp.int32)] * big.ndim
+            idx[axis] = slot
+            return jax.lax.dynamic_update_slice(
+                big, small.astype(big.dtype), tuple(idx))
+
+        caches = jax.tree_util.tree_map_with_path(
+            ins, state["caches"], fresh_caches)
+        tokens = jax.lax.dynamic_update_slice(
+            state["tokens"], first_tok.astype(jnp.int32), (slot, 0))
+        pos = jax.lax.dynamic_update_slice(
+            state["pos"], jnp.full((1,), length, jnp.int32), (slot,))
+        active = jax.lax.dynamic_update_slice(
+            state["active"], jnp.ones((1,), bool), (slot,))
+        return dict(state, caches=caches, tokens=tokens, pos=pos,
+                    active=active)
+
+    return admit
+
+
+def retire_slot(state, slot: int):
+    """Mark a slot free; its cache rows are overwritten on next admit."""
+    return dict(state, active=state["active"].at[slot].set(False))
+
+
 def make_decode_step(cfg: ModelConfig, dali_cfg: Optional[DaliConfig] = None,
                      moe_capacity: Optional[int] = None,
                      sample: bool = False, temperature: float = 1.0):
     """Returns decode(params, state, res_vecs=None) -> (state', logits,
     telemetry).  With ``dali_cfg`` the DALI scheduler (greedy assignment +
-    residual prefetch + workload cache, paper §4) runs in-graph each step."""
+    residual prefetch + workload cache, paper §4) runs in-graph each step.
+
+    Works for both serve-state layouts: a scalar ``pos`` decodes the wave
+    way (shared position); a per-slot ``pos`` (B,) uses per-row positions
+    and, when DALI is on, masks routing observables by ``state["active"]``
+    so scheduling sees the actual per-step token mix."""
     use_dali = dali_cfg is not None and cfg.moe is not None
 
     def decode(params, state, res_vecs=None):
-        positions = state["pos"] + jnp.arange(1, dtype=jnp.int32)
+        per_slot = state["pos"].ndim == 1
+        if per_slot:
+            positions = state["pos"][:, None]            # (B, 1)
+            active = state["active"]
+        else:
+            positions = state["pos"] + jnp.arange(1, dtype=jnp.int32)
+            active = None
         logits, caches, infos = apply_model(
             params, state["tokens"], cfg, positions=positions,
             caches=state["caches"], moe_capacity=moe_capacity,
@@ -68,20 +160,30 @@ def make_decode_step(cfg: ModelConfig, dali_cfg: Optional[DaliConfig] = None,
         else:
             rng = state["rng"]
             nxt = jnp.argmax(logits[:, -1:], axis=-1)
+        if per_slot:
+            # retired/empty slots hold position (their cache row is dead
+            # weight until the next admission overwrites it)
+            new_pos = state["pos"] + active.astype(jnp.int32)
+        else:
+            new_pos = state["pos"] + 1
         new_state = dict(state, tokens=nxt.astype(jnp.int32),
-                         pos=state["pos"] + 1, caches=caches, rng=rng)
+                         pos=new_pos, caches=caches, rng=rng)
         telemetry = {}
         if use_dali:
-            workloads = collect_field(infos, "workload")        # (L, E)
             gate_in = collect_field(infos, "gate_in")           # (L, T, d)
             routers = stack_routers(params, cfg)                # (L, d, E)
+            if per_slot:
+                topk = collect_field(infos, "topk_idx")         # (L, T, K)
+                workloads = masked_workloads(topk, cfg.moe.n_routed, active)
+            else:
+                workloads = collect_field(infos, "workload")    # (L, E)
             if res_vecs is None:
                 res_vecs = jnp.zeros(
                     (workloads.shape[0], cfg.d_model), jnp.float32)
             new_dali, telemetry = dali_schedule(
                 state["dali"], workloads, gate_in, routers, res_vecs,
                 dali_cfg, top_k=cfg.moe.top_k,
-                router_type=cfg.moe.router_type)
+                router_type=cfg.moe.router_type, token_mask=active)
             new_state["dali"] = new_dali
         return new_state, logits, telemetry
 
@@ -90,14 +192,18 @@ def make_decode_step(cfg: ModelConfig, dali_cfg: Optional[DaliConfig] = None,
 
 def init_serve_state(cfg: ModelConfig, batch: int, max_len: int,
                      dali_cfg: Optional[DaliConfig] = None,
-                     dtype=None, n_cross: Optional[int] = None, seed: int = 0):
+                     dtype=None, n_cross: Optional[int] = None, seed: int = 0,
+                     per_slot: bool = False):
     state = {
         "tokens": jnp.zeros((batch, 1), jnp.int32),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": (jnp.zeros((batch,), jnp.int32) if per_slot
+                else jnp.zeros((), jnp.int32)),
         "caches": init_caches(cfg, batch, max_len, dtype=dtype,
                               n_cross=n_cross),
         "rng": jax.random.PRNGKey(seed),
     }
+    if per_slot:
+        state["active"] = jnp.zeros((batch,), bool)
     if dali_cfg is not None and cfg.moe is not None:
         state["dali"] = init_dali_state(dali_cfg)
     return state

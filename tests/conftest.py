@@ -1,8 +1,9 @@
 import os
 import sys
 
-# src layout import without install
+# src layout import without install; tests dir for local helper modules
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
 
 import jax
 

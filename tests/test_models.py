@@ -6,8 +6,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
 
+from _hypothesis_compat import given, settings, st
 from repro.configs import get_config, make_smoke
 from repro.models.attention import _mha, _mha_blockwise
 from repro.models.config import (AttentionConfig, MambaConfig, ModelConfig,

@@ -1,8 +1,8 @@
 """Residual-Based Prefetching (paper §4.2) and Workload-Aware Cache
 Replacement (paper §4.3) unit + property tests."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
 
+from _hypothesis_compat import given, settings, st
 from repro.core.cache import (LRUCache, ScoreCache, StaticCache,
                               WorkloadAwareCache)
 from repro.core.prefetch import (FeaturePrefetcher, ResidualPrefetcher,
