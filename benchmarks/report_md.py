@@ -1,6 +1,8 @@
 """Render reports/dryrun/*.json into the EXPERIMENTS.md §Dry-run and
-§Roofline markdown tables, and reports/serving/*.json (written by
-benchmarks/serving_throughput.py) into the §Serving table.
+§Roofline markdown tables, reports/serving/*.json (written by
+benchmarks/serving_throughput.py) into the §Serving table, and
+reports/bench/BENCH_moe_dispatch.json (benchmarks/moe_dispatch.py) into
+the §MoE dispatch table.
 
   PYTHONPATH=src python -m benchmarks.report_md > reports/roofline_tables.md
 """
@@ -15,6 +17,8 @@ DRYRUN_DIR = os.path.normpath(os.path.join(
     os.path.dirname(__file__), "..", "reports", "dryrun"))
 SERVING_DIR = os.path.normpath(os.path.join(
     os.path.dirname(__file__), "..", "reports", "serving"))
+BENCH_DIR = os.path.normpath(os.path.join(
+    os.path.dirname(__file__), "..", "reports", "bench"))
 
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 
@@ -87,6 +91,44 @@ def main():
           dict(doms))
 
     serving_section()
+    moe_dispatch_section()
+
+
+def moe_dispatch_section():
+    """§MoE dispatch: dense capacity-bucket sweep vs the sparse decode
+    fast path (benchmarks/moe_dispatch.py, DESIGN.md §4).
+
+    Reading the columns: the dense path computes E x C bucket rows every
+    step regardless of workload; the sparse path gathers the activated
+    experts' weights and computes B x K rows.  The speedup column is the
+    dispatch overcompute the workload-aware path removes at decode; rows
+    where it dips below 1x are the regime the static selection rule
+    assigns to the dense path (small E, larger batch)."""
+    f = os.path.join(BENCH_DIR, "BENCH_moe_dispatch.json")
+    if not os.path.exists(f):
+        return
+    rec = json.load(open(f))
+    print("\n### MoE dispatch: dense sweep vs sparse decode fast path\n")
+    print(f"(backend={rec['backend']}, d_model={rec['d_model']}, "
+          f"d_expert={rec['d_expert']})\n")
+    for line in moe_dispatch_table(rec["rows"]):
+        print(line)
+    print("\n(µs/step on one MoE layer; production decode picks the "
+          "faster path statically from shapes — see "
+          "repro/models/moe.py::use_sparse_path.)")
+
+
+def moe_dispatch_table(rows):
+    """Markdown table lines for moe_dispatch records (single source of
+    the column layout — the benchmark's stdout uses it too)."""
+    out = ["| E | batch | dense µs | sparse µs | speedup | dense rows | "
+           "sparse rows |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(f"| {r['E']} | {r['batch']} | {r['dense_us']:.1f} "
+                   f"| {r['sparse_us']:.1f} | {r['speedup']:.2f}x "
+                   f"| {r['dense_rows']} | {r['sparse_rows']} |")
+    return out
 
 
 def serving_section():

@@ -37,6 +37,8 @@ from repro.serving.steps import default_dali_config
 
 REPORT_DIR = os.path.normpath(os.path.join(
     os.path.dirname(__file__), "..", "reports", "serving"))
+BENCH_DIR = os.path.normpath(os.path.join(
+    os.path.dirname(__file__), "..", "reports", "bench"))
 
 
 def make_workload(bm, n: int, min_prompt: int, max_prompt: int,
@@ -154,7 +156,7 @@ def main():
         print(f"\ncontinuous/wave decode speedup: {ratio:.2f}x")
 
     out = args.json or os.path.join(REPORT_DIR, f"{args.arch}.json")
-    os.makedirs(os.path.dirname(out), exist_ok=True)
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
     with open(out, "w") as f:
         json.dump({"arch": args.arch,
                    "workload": {"requests": args.requests,
@@ -163,6 +165,32 @@ def main():
                                 "new": [args.min_new, args.max_new]},
                    "servers": by_kind}, f, indent=2)
     print(f"wrote {out}")
+
+    # compact trajectory record (merged across archs): the numbers a later
+    # PR diffs against to catch serving-throughput regressions
+    bench = os.path.join(BENCH_DIR, "BENCH_serving.json")
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    merged = {}
+    if os.path.exists(bench):
+        with open(bench) as f:
+            merged = json.load(f)
+    # per-server update so a single-server run never drops the other
+    # server's recorded trajectory; each record carries ITS OWN workload
+    # so a cross-PR diff can tell code deltas from workload deltas even
+    # when servers were last measured under different workloads
+    workload = {
+        "requests": args.requests, "batch": args.batch, "rate": args.rate,
+        "prompt": [args.min_prompt, args.max_prompt],
+        "new": [args.min_new, args.max_new], "max_len": args.max_len}
+    merged.setdefault(args.arch, {}).update({
+        k: {"decode_tok_s": round(r["decode_tok_s"], 2),
+            "total_tok_s": round(r["total_tok_s"], 2),
+            "ttft_p50_s": round(r["ttft_p50_s"], 4),
+            "workload": workload}
+        for k, r in by_kind.items()})
+    with open(bench, "w") as f:
+        json.dump(merged, f, indent=2, sort_keys=True)
+    print(f"wrote {bench}")
 
 
 if __name__ == "__main__":

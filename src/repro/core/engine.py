@@ -19,7 +19,7 @@ bytes and cache hits so the serve loop can report scheduling telemetry.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -64,7 +64,15 @@ class DaliConfig:
 
 
 def init_dali_state(dcfg: DaliConfig, key=None):
-    """resident: (L, E) bool — paper: cache seeded with random experts."""
+    """resident: (L, E) bool — paper: cache seeded with random experts.
+
+    ``acc`` is the device-side telemetry accumulator: cumulative sums of
+    the per-step scheduling telemetry, folded in-graph by
+    ``dali_schedule`` so the serve loop never has to sync per step —
+    ``TelemetryAggregator`` drains it once per flush interval.  Counters
+    are int32 (exact); the time sums are float32 running totals of
+    *modeled* time estimates (DESIGN.md §2), whose rounding drift only
+    becomes material past ~1e6 uninterrupted steps per state lineage."""
     L, E, C = dcfg.n_moe_layers, dcfg.n_experts, dcfg.cache_size
     if key is None:
         key = jax.random.PRNGKey(0)
@@ -75,6 +83,14 @@ def init_dali_state(dcfg: DaliConfig, key=None):
         "resident": resident,
         "scores": jnp.zeros((L, E), jnp.float32),
         "tick": jnp.zeros((), jnp.int32),
+        "acc": {
+            "steps": jnp.zeros((), jnp.int32),
+            "moe_time": jnp.zeros((), jnp.float32),
+            "link_time": jnp.zeros((), jnp.float32),
+            "hits": jnp.zeros((), jnp.int32),
+            "misses": jnp.zeros((), jnp.int32),
+            "swaps": jnp.zeros((), jnp.int32),
+        },
     }
 
 
@@ -150,12 +166,17 @@ def dali_schedule(state, workloads, gate_in, routers, res_vecs,
     w = workloads.astype(jnp.float32)
 
     # --- Residual-Based Prefetching: predictions for layers 1..L-1 --------
-    def pf(l):
-        return predict_next_workload(gate_in[l - 1], res_vecs[l - 1],
-                                     routers[l], top_k, router_type,
-                                     token_mask=token_mask)
-    pf_pred = jnp.stack([jnp.zeros((E,), jnp.int32)]
-                        + [pf(l) for l in range(1, L)])       # (L, E)
+    # vmapped over layers so trace size / compile time stay O(1) in L
+    # (layer l's router applied to layer l-1's corrected gate input)
+    if L > 1:
+        pf_rest = jax.vmap(
+            lambda gi, rv, rt: predict_next_workload(
+                gi, rv, rt, top_k, router_type, token_mask=token_mask)
+        )(gate_in[:-1], res_vecs[:-1], routers[1:])           # (L-1, E)
+        pf_pred = jnp.concatenate(
+            [jnp.zeros((1, E), pf_rest.dtype), pf_rest])      # (L, E)
+    else:
+        pf_pred = jnp.zeros((L, E), jnp.int32)
     pf_rank = jnp.argsort(-pf_pred, axis=-1)
     prefetched = jnp.zeros((L, E), bool)
     cols = pf_rank[:, :dcfg.prefetch_size]
@@ -183,6 +204,7 @@ def dali_schedule(state, workloads, gate_in, routers, res_vecs,
     link_s = (misses.astype(jnp.float32) * dcfg.t_trans
               + n_swaps.astype(jnp.float32) * dcfg.t_trans
               + jnp.sum(prefetched, -1).astype(jnp.float32) * dcfg.t_trans)
+    step_moe_time = jnp.sum(jnp.maximum(T_cpu, T_gpu))
     telemetry = {
         "on_gpu": on_gpu, "on_cpu": on_cpu,
         "T_cpu": T_cpu, "T_gpu": T_gpu,
@@ -190,8 +212,20 @@ def dali_schedule(state, workloads, gate_in, routers, res_vecs,
         "hits": hits, "misses": misses, "swaps": n_swaps,
         "prefetched": prefetched, "pf_pred": pf_pred,
         "link_seconds": link_s,
-        "step_moe_time": jnp.sum(jnp.maximum(T_cpu, T_gpu)),
+        "step_moe_time": step_moe_time,
     }
+    # fold cumulative sums into the device-side accumulator so serve loops
+    # can read telemetry without a per-step host sync (DESIGN.md §4)
+    acc = state.get("acc")
+    if acc is not None:
+        new_state["acc"] = {
+            "steps": acc["steps"] + 1,
+            "moe_time": acc["moe_time"] + step_moe_time,
+            "link_time": acc["link_time"] + jnp.sum(link_s),
+            "hits": acc["hits"] + jnp.sum(hits).astype(jnp.int32),
+            "misses": acc["misses"] + jnp.sum(misses).astype(jnp.int32),
+            "swaps": acc["swaps"] + jnp.sum(n_swaps).astype(jnp.int32),
+        }
     return new_state, telemetry
 
 
@@ -208,10 +242,22 @@ def masked_workloads(topk_idx, n_experts: int, token_mask):
 
 @dataclass
 class TelemetryAggregator:
-    """Host-side accumulator for per-step DALI telemetry across a serve
-    run whose batch composition changes every step (continuous batching).
-    One ``update`` per decode step; ``n_active`` is the number of live
-    slots that step, so occupancy-weighted estimates stay faithful."""
+    """Host-side view of DALI telemetry across a serve run whose batch
+    composition changes every step (continuous batching).
+
+    Sync-free path (what the servers use): ``observe`` once per decode
+    step records the host-known counters (steps, live tokens) and keeps a
+    handle to the device-side cumulative accumulator
+    (``dali_state["acc"]``) — no device→host transfer.  Every
+    ``flush_interval`` observed steps (and at ``flush``/``end_epoch``)
+    the accumulator is drained with ONE transfer and the deltas land in
+    the host totals.  ``end_epoch`` additionally re-bases the drain for a
+    fresh dali state (the wave server re-inits state per wave).
+
+    ``update`` is the legacy per-step host-sync path over a telemetry
+    dict; it remains for direct telemetry tests but should not be mixed
+    with ``observe`` on the same aggregator."""
+    flush_interval: int = 16
     steps: int = 0
     moe_time_est: float = 0.0
     link_time_est: float = 0.0
@@ -219,6 +265,46 @@ class TelemetryAggregator:
     misses: int = 0
     swaps: int = 0
     active_tokens: int = 0
+    _pending: object = field(default=None, repr=False)
+    _prev: dict = field(default_factory=dict, repr=False)
+    _since_flush: int = field(default=0, repr=False)
+
+    def observe(self, dali_state, n_active=None):
+        """Per decode step, sync-free: stash the device accumulator and
+        bump host-side counters.  No-op when DALI is off."""
+        acc = dali_state.get("acc") if dali_state else None
+        if acc is None:
+            return
+        self.steps += 1
+        if n_active is not None:
+            self.active_tokens += int(n_active)
+        self._pending = acc
+        self._since_flush += 1
+        if self._since_flush >= self.flush_interval:
+            self.flush()
+
+    def flush(self):
+        """Drain the last observed device accumulator (one host sync)."""
+        if self._pending is None:
+            return
+        acc = jax.device_get(self._pending)
+        for attr, key, cast in (("moe_time_est", "moe_time", float),
+                                ("link_time_est", "link_time", float),
+                                ("hits", "hits", int),
+                                ("misses", "misses", int),
+                                ("swaps", "swaps", int)):
+            cur = float(acc[key])
+            setattr(self, attr,
+                    getattr(self, attr) + cast(cur - self._prev.get(key, 0)))
+            self._prev[key] = cur
+        self._pending = None
+        self._since_flush = 0
+
+    def end_epoch(self):
+        """Flush and re-base: the next observed dali state starts its
+        accumulator from zero (wave boundary / retirement of a run)."""
+        self.flush()
+        self._prev = {}
 
     def update(self, tel, n_active=None):
         if not tel:

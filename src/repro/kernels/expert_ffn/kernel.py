@@ -12,11 +12,19 @@ accumulates partial down-projections in VMEM across the f sweep:
   Wg/Wu block (d, bf)   — streamed per (e, fi)          ~ d*bf*2*2
   Wd block    (bf, d)   — streamed per (e, fi)          ~ bf*d*2
   out block   (bc, d)   — f32 accumulator, revisited    ~ bc*d*4
+  counts      (E,)      — scalar-prefetched to SMEM (ragged variant)
 
 Block sizes default to MXU-friendly multiples of 128 and are clamped to
 the problem size.  All matmuls accumulate in f32
 (preferred_element_type), output cast to the input dtype.
-"""
+
+The ragged variant takes per-expert token ``counts`` (the MoE workload
+vector) via scalar prefetch and guards each (e, ci) block with ``pl.when``
+so capacity blocks holding no real tokens skip their MXU work entirely
+(MegaBlocks-style skip-empty; block DMAs still stream — the index maps are
+unconditional).  Rows at/beyond counts[e] inside a partial block are
+zeroed before the matmuls, so garbage in a bucket tail can never leak
+into the output."""
 from __future__ import annotations
 
 import functools
@@ -24,6 +32,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 _ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
 
@@ -45,30 +54,111 @@ def _kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, *, act, n_fi):
                         preferred_element_type=jnp.float32)
 
 
+def _kernel_ragged(counts_ref, x_ref, wg_ref, wu_ref, wd_ref, o_ref, *,
+                   act, bc):
+    e, ci, fi = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    n_tok = counts_ref[e]                          # this expert's workload
+
+    @pl.when(fi == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(ci * bc < n_tok)                      # skip-empty: no MXU work
+    def _compute():                                # for workload-free blocks
+        x = x_ref[0]                               # (bc, d)
+        row = ci * bc + jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+        x = jnp.where(row < n_tok, x, 0)           # mask partial-block tail
+        wg = wg_ref[0]                             # (d, bf)
+        wu = wu_ref[0]
+        wd = wd_ref[0]                             # (bf, d)
+        h = _ACTS[act](jnp.dot(x, wg, preferred_element_type=jnp.float32))
+        h = h * jnp.dot(x, wu, preferred_element_type=jnp.float32)
+        o_ref[0] += jnp.dot(h.astype(wd.dtype), wd,
+                            preferred_element_type=jnp.float32)
+
+
+def _sublane(dtype) -> int:
+    """Minimum second-minor tile dim per dtype (TPU layout constraint)."""
+    return {jnp.dtype(jnp.bfloat16): 16, jnp.dtype(jnp.int8): 32}.get(
+        jnp.dtype(dtype), 8)
+
+
+def _block_size(n: int, target: int, unit: int = 1) -> int:
+    """Largest divisor of n that is <= target and a multiple of ``unit``
+    (the sublane tile), so arbitrary problem shapes — capacities pad to
+    multiples of 4, d_expert need not divide block_f — tile without
+    remainder blocks or sub-tile sublane dims.  Requires unit | n (the
+    caller pads n first)."""
+    for b in range(min(target, n), 0, -1):
+        if n % b == 0 and b % unit == 0:
+            return b
+    return n
+
+
 @functools.partial(jax.jit, static_argnames=("act", "block_c", "block_f",
                                              "interpret"))
-def expert_ffn(xe, w_gate, w_up, w_down, act: str = "silu",
+def expert_ffn(xe, w_gate, w_up, w_down, counts=None, act: str = "silu",
                block_c: int = 128, block_f: int = 512,
                interpret: bool = False):
-    """xe (E, C, d); w_gate/w_up (E, d, f); w_down (E, f, d) -> (E, C, d)."""
+    """xe (E, C, d); w_gate/w_up (E, d, f); w_down (E, f, d) -> (E, C, d).
+
+    With ``counts`` (E,) int32 — tokens actually packed per expert — the
+    ragged skip-empty kernel runs; blocks entirely above counts[e] produce
+    zeros without touching the MXU."""
     E, C, d = xe.shape
     f = w_gate.shape[-1]
-    bc = min(block_c, C)
-    bf = min(block_f, f)
-    assert C % bc == 0 and f % bf == 0, (C, bc, f, bf)
+    # pad the sublane-facing dims (token rows; f as Wd's row dim) to the
+    # dtype tile so Mosaic never sees a sub-tile block: zero rows/columns
+    # contribute zero, and the output is sliced back below
+    sub = _sublane(xe.dtype)
+    C_in = C
+    C_pad = -(-C // sub) * sub
+    f_pad = -(-f // sub) * sub
+    if C_pad != C:
+        xe = jnp.pad(xe, ((0, 0), (0, C_pad - C), (0, 0)))
+    if f_pad != f:
+        w_gate = jnp.pad(w_gate, ((0, 0), (0, 0), (0, f_pad - f)))
+        w_up = jnp.pad(w_up, ((0, 0), (0, 0), (0, f_pad - f)))
+        w_down = jnp.pad(w_down, ((0, 0), (0, f_pad - f), (0, 0)))
+    C, f = C_pad, f_pad
+    bc = _block_size(C, block_c, sub)
+    bf = _block_size(f, block_f, sub)
     grid = (E, C // bc, f // bf)
+    out_shape = jax.ShapeDtypeStruct((E, C, d), jnp.float32)
 
-    y = pl.pallas_call(
-        functools.partial(_kernel, act=act, n_fi=f // bf),
+    if counts is None:
+        y = pl.pallas_call(
+            functools.partial(_kernel, act=act, n_fi=f // bf),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bc, d), lambda e, ci, fi: (e, ci, 0)),
+                pl.BlockSpec((1, d, bf), lambda e, ci, fi: (e, 0, fi)),
+                pl.BlockSpec((1, d, bf), lambda e, ci, fi: (e, 0, fi)),
+                pl.BlockSpec((1, bf, d), lambda e, ci, fi: (e, fi, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bc, d), lambda e, ci, fi: (e, ci, 0)),
+            out_shape=out_shape,
+            interpret=interpret,
+        )(xe, w_gate, w_up, w_down)
+        return y[:, :C_in].astype(xe.dtype)
+
+    # ragged: counts ride ahead of the grid as a scalar-prefetch operand
+    # (SMEM), so the pl.when guard reads them before any block compute
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bc, d), lambda e, ci, fi: (e, ci, 0)),
-            pl.BlockSpec((1, d, bf), lambda e, ci, fi: (e, 0, fi)),
-            pl.BlockSpec((1, d, bf), lambda e, ci, fi: (e, 0, fi)),
-            pl.BlockSpec((1, bf, d), lambda e, ci, fi: (e, fi, 0)),
+            pl.BlockSpec((1, bc, d), lambda e, ci, fi, c: (e, ci, 0)),
+            pl.BlockSpec((1, d, bf), lambda e, ci, fi, c: (e, 0, fi)),
+            pl.BlockSpec((1, d, bf), lambda e, ci, fi, c: (e, 0, fi)),
+            pl.BlockSpec((1, bf, d), lambda e, ci, fi, c: (e, fi, 0)),
         ],
-        out_specs=pl.BlockSpec((1, bc, d), lambda e, ci, fi: (e, ci, 0)),
-        out_shape=jax.ShapeDtypeStruct((E, C, d), jnp.float32),
+        out_specs=pl.BlockSpec((1, bc, d), lambda e, ci, fi, c: (e, ci, 0)),
+    )
+    y = pl.pallas_call(
+        functools.partial(_kernel_ragged, act=act, bc=bc),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
         interpret=interpret,
-    )(xe, w_gate, w_up, w_down)
-    return y.astype(xe.dtype)
+    )(counts.astype(jnp.int32), xe, w_gate, w_up, w_down)
+    return y[:, :C_in].astype(xe.dtype)

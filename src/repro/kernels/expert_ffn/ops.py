@@ -1,18 +1,27 @@
 """Public op: grouped expert FFN — Pallas kernel on TPU, jnp oracle
-elsewhere (or interpret=True for kernel-path testing on CPU)."""
+elsewhere (or interpret=True for kernel-path testing on CPU).
+
+``counts`` (E,) int32 selects the ragged skip-empty variant: capacity
+blocks holding no real tokens skip their MXU work on TPU (pl.when), and
+the oracle masks the same rows — empty/skewed workloads cost what they
+contain, not E x C."""
 from __future__ import annotations
 
 import jax
 
 from .kernel import expert_ffn as expert_ffn_pallas
-from .ref import expert_ffn_ref
+from .ref import expert_ffn_ragged_ref, expert_ffn_ref
 
 
 def expert_ffn_op(xe, w_gate, w_up, w_down, act: str = "silu",
-                  force_kernel: bool = False, interpret: bool | None = None):
+                  counts=None, force_kernel: bool = False,
+                  interpret: bool | None = None):
     on_tpu = jax.default_backend() == "tpu"
     if on_tpu or force_kernel:
-        return expert_ffn_pallas(xe, w_gate, w_up, w_down, act=act,
+        return expert_ffn_pallas(xe, w_gate, w_up, w_down, counts=counts,
+                                 act=act,
                                  interpret=(not on_tpu) if interpret is None
                                  else interpret)
-    return expert_ffn_ref(xe, w_gate, w_up, w_down, act=act)
+    if counts is None:
+        return expert_ffn_ref(xe, w_gate, w_up, w_down, act=act)
+    return expert_ffn_ragged_ref(xe, w_gate, w_up, w_down, counts, act=act)

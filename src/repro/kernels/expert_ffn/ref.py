@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the grouped expert-FFN kernel."""
+"""Pure-jnp oracles for the grouped expert-FFN kernels (dense + ragged)."""
 from __future__ import annotations
 
 import jax
@@ -18,3 +18,16 @@ def expert_ffn_ref(xe, w_gate, w_up, w_down, act: str = "silu"):
     h = h * jnp.einsum("ecd,edf->ecf", xe.astype(f32), w_up.astype(f32))
     y = jnp.einsum("ecf,efd->ecd", h, w_down.astype(f32))
     return y.astype(xe.dtype)
+
+
+def expert_ffn_ragged_ref(xe, w_gate, w_up, w_down, counts,
+                          act: str = "silu"):
+    """Ragged oracle: rows at/beyond ``counts[e]`` are empty capacity
+    padding — masked on the way in AND the way out, so the result matches
+    the skip-empty kernel even when the caller left garbage in a bucket's
+    unused tail.  counts (E,) int32 -> (E, C, d)."""
+    C = xe.shape[1]
+    row_valid = jnp.arange(C)[None, :] < counts[:, None]          # (E, C)
+    y = expert_ffn_ref(jnp.where(row_valid[..., None], xe, 0),
+                       w_gate, w_up, w_down, act=act)
+    return jnp.where(row_valid[..., None], y, 0)

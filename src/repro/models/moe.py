@@ -1,4 +1,4 @@
-"""Mixture-of-Experts layer.
+"""Mixture-of-Experts layer with workload-aware execution paths.
 
 Dispatch is sort/gather based (MegaBlocks-style, adapted to static shapes):
 tokens are ordered by assigned expert via argsort, sliced into per-expert
@@ -7,6 +7,21 @@ batched (E, C, d) computation, and scatter-added back.  This avoids the
 O(T·E·C·d) one-hot dispatch matmuls of the classic Switch formulation —
 dispatch/combine are pure data movement, so compiled FLOPs stay ~the useful
 expert FLOPs (visible in the roofline's MODEL_FLOPS/HLO_FLOPs ratio).
+
+Two execution paths share that routing front-end (DESIGN.md §4):
+
+* **dense** — the (E, C, d) capacity-bucket sweep above.  Right for
+  prefill/training where most experts see real traffic; on TPU the bucket
+  compute routes through the grouped Pallas kernel with per-expert counts
+  so empty capacity blocks skip their MXU work.
+* **sparse decode fast path** — when a step activates few enough
+  (token, k) slots to undercut the dense sweep's minimum bucket work by
+  the measured gather-overhead break-even (``T·K·O < E·C_min``, see
+  ``use_sparse_path``), gather the activated experts' weight slices and
+  run a per-token grouped SwiGLU.  No zero buckets, no drops by
+  construction; cost scales with the *actual* workload — the same
+  observable DALI schedules on.  The rule is static in shapes, so it
+  jits into the existing serving decode step.
 
 The layer also returns the per-expert *workload* vector (token counts) and
 per-token routing choices — exactly the quantities DALI's scheduler,
@@ -31,6 +46,28 @@ def expert_capacity(cfg_m: MoEConfig, n_tokens: int) -> int:
     c = int(np.ceil(n_tokens * cfg_m.top_k / cfg_m.n_routed
                     * cfg_m.capacity_factor))
     return max(4, int(np.ceil(c / 4)) * 4)  # pad to tiling-friendly multiple
+
+
+# the dense sweep never runs buckets smaller than this (the max(4, ...)
+# floor above)
+SPARSE_CMIN = 4
+# the sparse path pays a per-slot weight-slice gather on top of its FLOPs,
+# so it must undercut the dense sweep's minimum rows by this factor to
+# win; measured break-even across E x batch in benchmarks/moe_dispatch.py
+SPARSE_OVERHEAD = 4
+
+
+def use_sparse_path(m: MoEConfig, n_tokens: int,
+                    capacity: Optional[int]) -> bool:
+    """Static path-selection rule (DESIGN.md §4): take the gathered sparse
+    path when the activated (token, k) slots undercut the dense sweep's
+    minimum bucket work E·C_min by the gather-overhead factor.  Shape-only,
+    so each jitted step function compiles exactly one path.  An explicit
+    ``capacity`` pins the dense path — its drop semantics are part of the
+    caller's contract (dry-run shape lowering, chunked prefill)."""
+    return (capacity is None
+            and n_tokens * m.top_k * SPARSE_OVERHEAD
+            < m.n_routed * SPARSE_CMIN)
 
 
 def init_moe(key, cfg: ModelConfig):
@@ -75,18 +112,49 @@ def route(params, x_flat, m: MoEConfig):
     return gates, idx, probs, logits
 
 
-def expert_ffn_dense(params, xe, cfg: ModelConfig):
+def expert_ffn_dense(params, xe, cfg: ModelConfig, counts=None):
     """Batched per-expert SwiGLU: xe (E, C, d) -> (E, C, d).
 
-    The Pallas grouped kernel in repro.kernels.expert_ffn implements the
-    same contraction with explicit VMEM tiling; this is the jnp path used
-    on non-TPU backends and as the kernel's oracle."""
-    from repro.launch.sharding import hint
+    On TPU (single device, no active mesh) this routes through the grouped
+    Pallas kernel in repro.kernels.expert_ffn, passing per-expert
+    ``counts`` so empty/partial capacity blocks skip their MXU work
+    (skip-empty, MegaBlocks-style).  Elsewhere the jnp einsum path below
+    runs — it is also the kernel's oracle.  Rows at or beyond ``counts[e]``
+    are zero on both paths (the dispatch zero-fills them)."""
+    from repro.launch.sharding import active, hint
+    if jax.default_backend() == "tpu" and active()["mesh"] is None:
+        from repro.kernels.expert_ffn.ops import expert_ffn_op
+        return expert_ffn_op(xe, params["gate"], params["up"],
+                             params["down"], act=cfg.act, counts=counts)
     act = _ACTS[cfg.act]
     h = act(jnp.einsum("ecd,edf->ecf", xe, params["gate"])) \
         * jnp.einsum("ecd,edf->ecf", xe, params["up"])
     h = hint(h, "experts", "cap", "expert_ffn")
     return jnp.einsum("ecf,efd->ecd", h, params["down"])
+
+
+def grouped_expert_ffn(params, xf, idx, gates, cfg: ModelConfig):
+    """Sparse decode fast path: per-(token, k) gathered-weight SwiGLU.
+
+    Gathers the T·K activated experts' weight slices and contracts each
+    (token, k) slot against its own slice — no capacity buckets, no
+    zero-bucket compute, and no drops by construction (every slot keeps
+    its expert).  Cost scales with the actual activated workload T·K
+    instead of the dense E·C sweep.  xf (T, d), idx/gates (T, K) ->
+    combined output (T, d)."""
+    T, d = xf.shape
+    K = idx.shape[1]
+    flat_e = idx.reshape(-1)                       # (T*K,) activated experts
+    wg = params["gate"][flat_e]                    # (T*K, d, f) weight slices
+    wu = params["up"][flat_e]
+    wd = params["down"][flat_e]
+    xs = jnp.repeat(xf, K, axis=0)                 # (T*K, d)
+    act = _ACTS[cfg.act]
+    h = act(jnp.einsum("td,tdf->tf", xs, wg)) \
+        * jnp.einsum("td,tdf->tf", xs, wu)
+    ys = jnp.einsum("tf,tfd->td", h, wd)           # (T*K, d)
+    return jnp.sum(ys.reshape(T, K, d)
+                   * gates.astype(ys.dtype)[..., None], axis=1)
 
 
 # token-chunked execution: data-dependent dispatch gathers make GSPMD
@@ -96,88 +164,150 @@ def expert_ffn_dense(params, xe, cfg: ModelConfig):
 MOE_CHUNK_TOKENS = 16384
 
 
-def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None):
-    """Returns (y, info) where info carries DALI's routing observables."""
+def _workload_counts(flat_e, E, valid_rep):
+    """Per-expert token counts over the activated (token, k) slots.  With a
+    validity mask, padded slots are binned into a virtual expert E and
+    sliced off, so they never count toward the workload."""
+    if valid_rep is None:
+        return jnp.bincount(flat_e, length=E)
+    return jnp.bincount(jnp.where(valid_rep, flat_e, E), length=E + 1)[:E]
+
+
+def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None,
+              valid=None, force_path: Optional[str] = None):
+    """Returns (y, info) where info carries DALI's routing observables.
+
+    ``valid`` (T,) bool marks real tokens (None = all real): padded tokens
+    are excluded from capacity buckets, workload counts and aux losses,
+    and their combined output rows are zero (shared-expert output for them
+    is garbage the caller slices off — the chunked path below does).
+    ``force_path`` pins the execution path ("dense" | "sparse") for tests
+    and benchmarks; by default ``use_sparse_path`` selects statically from
+    shapes."""
     from repro.launch.sharding import hint
     from repro.models.moe_ep import apply_moe_ep, ep_applicable
     m = cfg.moe
     B, S, d = x.shape
     T_all = B * S
-    if ep_applicable(cfg, B, S):
+    if force_path is None and valid is None and ep_applicable(cfg, B, S):
         # production path under an active mesh: shard_map expert-parallel
         # all-to-all dispatch (see moe_ep.py / EXPERIMENTS.md §Perf)
         return apply_moe_ep(params, x, cfg, capacity=capacity)
-    if T_all > MOE_CHUNK_TOKENS and T_all % MOE_CHUNK_TOKENS == 0:
-        n_chunks = T_all // MOE_CHUNK_TOKENS
+    if T_all > MOE_CHUNK_TOKENS:
+        n_chunks = -(-T_all // MOE_CHUNK_TOKENS)
+        T_pad = n_chunks * MOE_CHUNK_TOKENS
         cap_c = (capacity + n_chunks - 1) // n_chunks \
             if capacity is not None else None
-        xc = x.reshape(n_chunks, 1, MOE_CHUNK_TOKENS, d)
+        xf_all = x.reshape(T_all, d)
+        if T_pad != T_all:       # ragged tail: pad + mask, stay bounded
+            xf_all = jnp.concatenate(
+                [xf_all, jnp.zeros((T_pad - T_all, d), x.dtype)])
+        if valid is None:
+            vmask = jnp.arange(T_pad) < T_all
+        else:                    # caller mask: pad slots are also invalid
+            vmask = jnp.concatenate(
+                [valid, jnp.zeros((T_pad - T_all,), bool)])
+        xc = xf_all.reshape(n_chunks, 1, MOE_CHUNK_TOKENS, d)
+        vc = vmask.reshape(n_chunks, MOE_CHUNK_TOKENS)
 
-        def body(_, x_chunk):
-            y, info = apply_moe(params, x_chunk, cfg, capacity=cap_c)
+        def body(_, xv):
+            x_chunk, v_chunk = xv
+            y, info = apply_moe(params, x_chunk, cfg, capacity=cap_c,
+                                valid=v_chunk, force_path=force_path)
             return None, (y, info)
 
-        _, (yc, infos) = jax.lax.scan(body, None, xc)
-        y = yc.reshape(B, S, d)
+        _, (yc, infos) = jax.lax.scan(body, None, (xc, vc))
+        y = yc.reshape(T_pad, d)[:T_all].reshape(B, S, d)
+        # per-chunk aux/z are means over that chunk's VALID tokens; weight
+        # by valid count so the tail chunk doesn't dilute the average
+        w_chunk = vc.sum(1).astype(jnp.float32) \
+            / jnp.maximum(vc.sum(), 1).astype(jnp.float32)
         info = {
             "workload": infos["workload"].sum(0),
-            "topk_idx": infos["topk_idx"].reshape(T_all, -1),
-            "gates": infos["gates"].reshape(T_all, -1),
-            "probs": infos["probs"].reshape(T_all, -1),
-            "gate_in": infos["gate_in"].reshape(T_all, d),
-            "aux_loss": infos["aux_loss"].mean(),
-            "z_loss": infos["z_loss"].mean(),
+            "topk_idx": infos["topk_idx"].reshape(T_pad, -1)[:T_all],
+            "gates": infos["gates"].reshape(T_pad, -1)[:T_all],
+            "probs": infos["probs"].reshape(T_pad, -1)[:T_all],
+            "gate_in": infos["gate_in"].reshape(T_pad, d)[:T_all],
+            "aux_loss": jnp.sum(infos["aux_loss"] * w_chunk),
+            "z_loss": jnp.sum(infos["z_loss"] * w_chunk),
             "dropped": infos["dropped"].sum(),
         }
         return y, info
     T = T_all
     E, K = m.n_routed, m.top_k
-    C = capacity if capacity is not None else expert_capacity(m, T)
     xf = hint(x.reshape(T, d), "tokens", "embed")
 
     gates, idx, probs, logits = route(params, xf, m)
+    vrep = None if valid is None else jnp.repeat(valid, K)      # (T*K,)
 
-    # ---- sort-based dispatch (gather-only; no float scatters) ---------------
-    flat_e = idx.reshape(-1)                       # (T*K,) expert ids, k-minor
-    flat_t = jnp.repeat(jnp.arange(T), K)          # source token per slot
-    order = jnp.argsort(flat_e, stable=True)       # group by expert
-    se, st = flat_e[order], flat_t[order]
-    counts = jnp.bincount(flat_e, length=E)                       # workload
-    offsets = jnp.concatenate([jnp.zeros((1,), counts.dtype),
-                               jnp.cumsum(counts)[:-1]])
-    rank = jnp.arange(T * K) - offsets[se]         # rank within expert group
+    sparse = (force_path == "sparse" if force_path is not None
+              else use_sparse_path(m, T, capacity))
+    if sparse:
+        # ---- decode fast path: gathered grouped SwiGLU ------------------
+        y = grouped_expert_ffn(params, xf, idx, gates, cfg)
+        counts = _workload_counts(idx.reshape(-1), E, vrep)
+        if valid is not None:
+            y = jnp.where(valid[:, None], y, 0)
+        dropped = jnp.zeros((), jnp.int32)         # no buckets, no drops
+    else:
+        C = capacity if capacity is not None else expert_capacity(m, T)
+        # ---- sort-based dispatch (gather-only; no float scatters) -------
+        flat_e = idx.reshape(-1)                   # (T*K,) expert ids, k-minor
+        flat_t = jnp.repeat(jnp.arange(T), K)      # source token per slot
+        # padded tokens sort into a virtual expert E: they never occupy a
+        # capacity slot and never count toward the workload
+        flat_key = flat_e if vrep is None else jnp.where(vrep, flat_e, E)
+        order = jnp.argsort(flat_key, stable=True)  # group by expert
+        se, st = flat_key[order], flat_t[order]
+        counts_ext = jnp.bincount(flat_key, length=E + 1)
+        counts = counts_ext[:E]                                   # workload
+        offsets = jnp.concatenate([jnp.zeros((1,), counts_ext.dtype),
+                                   jnp.cumsum(counts_ext)[:-1]])
+        rank = jnp.arange(T * K) - offsets[se]     # rank within expert group
 
-    # gather tokens into (E, C) capacity buckets
-    pos = offsets[:E, None] + jnp.arange(C)[None, :]              # (E, C)
-    bucket_valid = jnp.arange(C)[None, :] < jnp.minimum(counts[:, None], C)
-    src_tok = st[jnp.clip(pos, 0, T * K - 1)]                     # (E, C)
-    xe = jnp.where(bucket_valid[..., None], xf[src_tok], 0)
+        # gather tokens into (E, C) capacity buckets
+        pos = offsets[:E, None] + jnp.arange(C)[None, :]          # (E, C)
+        bucket_valid = jnp.arange(C)[None, :] < jnp.minimum(counts[:, None], C)
+        src_tok = st[jnp.clip(pos, 0, T * K - 1)]                 # (E, C)
+        xe = jnp.where(bucket_valid[..., None], xf[src_tok], 0)
 
-    xe = hint(xe, "experts", "cap", "embed")
-    ye = expert_ffn_dense(params, xe, cfg)                        # (E,C,d)
-    ye = hint(ye, "experts", "cap", "embed")
+        xe = hint(xe, "experts", "cap", "embed")
+        ye = expert_ffn_dense(params, xe, cfg, counts=counts)     # (E,C,d)
+        ye = hint(ye, "experts", "cap", "embed")
 
-    # gather results back per (token, k) slot: invert the sort with an
-    # int32 scatter (cheap), then weighted-sum over the K choices.
-    inv = jnp.zeros((T * K,), jnp.int32).at[order].set(
-        jnp.arange(T * K, dtype=jnp.int32))
-    rank_tk = rank[inv]                                           # (T*K,)
-    keep = rank_tk < C
-    contrib = ye[flat_e, jnp.where(keep, rank_tk, 0)]             # (T*K, d)
-    contrib = hint(jnp.where(keep[:, None], contrib, 0),
-                   "tokens", "embed")
-    y = jnp.sum(contrib.reshape(T, K, d)
-                * gates.astype(contrib.dtype)[..., None], axis=1)
+        # gather results back per (token, k) slot: invert the sort with an
+        # int32 scatter (cheap), then weighted-sum over the K choices.
+        inv = jnp.zeros((T * K,), jnp.int32).at[order].set(
+            jnp.arange(T * K, dtype=jnp.int32))
+        rank_tk = rank[inv]                                       # (T*K,)
+        keep = rank_tk < C
+        if vrep is not None:
+            keep = keep & vrep
+        contrib = ye[flat_e, jnp.where(keep, rank_tk, 0)]         # (T*K, d)
+        contrib = hint(jnp.where(keep[:, None], contrib, 0),
+                       "tokens", "embed")
+        y = jnp.sum(contrib.reshape(T, K, d)
+                    * gates.astype(contrib.dtype)[..., None], axis=1)
+        dropped = (jnp.sum(~keep) if vrep is None
+                   else jnp.sum(vrep & ~keep)).astype(jnp.int32)
     y = hint(y.astype(x.dtype), "tokens", "embed")
 
     if m.n_shared:
         y = y + apply_mlp(params["shared"], xf, cfg)
 
     # ---- aux losses + DALI observables --------------------------------------
-    frac_tokens = counts.astype(jnp.float32) / (T * K)
-    mean_prob = jnp.mean(probs, axis=0)
+    if valid is None:
+        frac_tokens = counts.astype(jnp.float32) / (T * K)
+        mean_prob = jnp.mean(probs, axis=0)
+        z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    else:
+        n_valid = jnp.maximum(jnp.sum(valid), 1).astype(jnp.float32)
+        frac_tokens = counts.astype(jnp.float32) / (n_valid * K)
+        vf = valid.astype(jnp.float32)
+        mean_prob = jnp.sum(probs * vf[:, None], axis=0) / n_valid
+        z_loss = jnp.sum(jax.nn.logsumexp(logits, axis=-1) ** 2
+                         * vf) / n_valid
     aux_loss = E * jnp.sum(frac_tokens * mean_prob)
-    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
     info = {
         "workload": counts,                        # (E,) tokens per expert
         "topk_idx": idx,                           # (T, K)
@@ -186,6 +316,6 @@ def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None):
         "gate_in": xf,                             # (T, d) gate input (trace)
         "aux_loss": aux_loss * m.aux_loss_weight,
         "z_loss": z_loss * m.router_z_weight,
-        "dropped": jnp.sum(~keep).astype(jnp.int32),
+        "dropped": dropped,
     }
     return y.reshape(B, S, d), info

@@ -20,6 +20,11 @@ the longest prompt in its wave and keeps slots of finished requests idle,
 so mixed-length traffic leaves throughput on the floor — kept as a stable
 baseline for tests, examples and the serving benchmark.
 
+Telemetry is sync-free in both servers: the jitted DALI schedule folds
+per-step sums into a device-side accumulator and the aggregator drains it
+once per flush interval (``TelemetryAggregator.observe``/``flush``), so
+the decode loop never blocks on a telemetry device→host transfer.
+
 Both servers respect ``Request.not_before`` (virtual arrival time) so the
 serving benchmark can drive them with the same Poisson arrival process,
 and both report per-request latency and TTFT.
@@ -236,7 +241,7 @@ class ContinuousBatchServer:
 
             # -- one decode step over the whole slot table -----------------
             t0 = time.perf_counter()
-            state, _, tel = self._decode(self.params, state, self.res_vecs)
+            state, _, _ = self._decode(self.params, state, self.res_vecs)
             toks = np.asarray(state["tokens"])[:, 0]
             t1 = time.perf_counter()
 
@@ -256,7 +261,10 @@ class ContinuousBatchServer:
             self.metrics.decode_s += t1 - t0
             self.metrics.steps += 1
             self.metrics.occupancy_sum += emitted
-            self.metrics.dali.update(tel, n_active=emitted)
+            # sync-free: telemetry accumulates on device, drained on the
+            # aggregator's flush interval (and below, at retirement)
+            self.metrics.dali.observe(state.get("dali"), n_active=emitted)
+        self.metrics.dali.end_epoch()
         return finished
 
 
@@ -353,8 +361,8 @@ class BatchServer:
             # the top of the step emits exactly one token (the fix for the
             # old live.sum() + re-derived-final-token double count)
             emitted = int(live.sum())
-            state, logits, tel = self._decode(self.params, state,
-                                              self.res_vecs)
+            state, logits, _ = self._decode(self.params, state,
+                                            self.res_vecs)
             toks = np.asarray(state["tokens"])[:, 0]
             t_step = time.perf_counter()
             for i, r in enumerate(wave):
@@ -366,10 +374,13 @@ class BatchServer:
             self.metrics.decode_tokens += emitted
             self.metrics.steps += 1
             self.metrics.occupancy_sum += emitted
-            self.metrics.dali.update(tel, n_active=emitted)
+            self.metrics.dali.observe(state.get("dali"), n_active=emitted)
             if not live.any():
                 break
         self.metrics.decode_s += time.perf_counter() - t0
+        # each wave re-inits its serve (and DALI) state: close the epoch so
+        # the next wave's accumulator drains from zero again
+        self.metrics.dali.end_epoch()
         self.metrics.waves += 1
         for r in wave:
             if not r.done_at:
