@@ -120,6 +120,19 @@ def load_model(arch: str, train_steps: int = 150, seed: int = 0) -> BenchModel:
     return bm
 
 
+def time_fn(fn, *args, reps: int = 30, warmup: int = 3) -> float:
+    """Median wall µs/call, jit-warmed, device-synchronised (the shared
+    timer for the µs/step benchmarks — moe_dispatch, ep_exchange)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
 class Csv:
     """Collector for the ``name,us_per_call,derived`` contract."""
 

@@ -1,0 +1,175 @@
+"""Expert-parallel exchange: workload-sized ragged all_to_all vs the
+dense full-capacity exchange (models/moe_ep.py, DESIGN.md §6), on a
+host-platform 8-device mesh.
+
+The dense path ships every (E/tp, C, d) capacity bucket through BOTH
+all_to_alls regardless of how empty it is; the ragged path exchanges
+per-device per-expert counts first (a (tp, E/tp) int32 all_to_all) and
+ships only C_x = next_pow2(global max demand) rows per bucket, clamped
+to C via a static capacity ladder.  Link bytes are computed analytically
+from the shipped shapes (host CPU wall time does not model a real
+interconnect — DESIGN.md §2 — but the per-step µs still tracks the
+dispatch/compute savings on skewed traffic); bytes scale with the actual
+workload, so uniform decode-like routing ships a small fraction of C and
+Zipf(1.2)-skewed routing ships the hot expert's rung.
+
+  PYTHONPATH=src python -m benchmarks.ep_exchange            # full sweep
+  PYTHONPATH=src python -m benchmarks.ep_exchange --smoke    # CI tiers
+
+Emits the ``name,us_per_call,derived`` CSV contract on stdout and a
+machine-readable ``reports/bench/BENCH_ep_exchange.json`` (rendered into
+EXPERIMENTS.md by benchmarks/report_md.py)."""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
+
+import argparse
+import json
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.launch import sharding as shd
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models.moe import apply_moe, init_moe
+from repro.models.moe_ep import ep_applicable
+
+BENCH_DIR = os.path.normpath(os.path.join(
+    os.path.dirname(__file__), "..", "reports", "bench"))
+
+E, K, D_MODEL, D_EXPERT = 64, 2, 128, 256
+ATOL = {"float32": 2e-5, "bfloat16": 2e-2}
+ROUTINGS = ("uniform", "zipf")
+
+
+def make_cfg(dtype: str) -> ModelConfig:
+    # capacity_factor=0 ("full", no drops) is the serving-realistic EP
+    # regime: C = per-device tokens, so the dense exchange is maximally
+    # workload-oblivious and the ragged saving is the honest number
+    return ModelConfig(d_model=D_MODEL, d_ff=D_EXPERT, vocab=64,
+                       dtype=dtype, param_dtype=dtype,
+                       moe=MoEConfig(n_routed=E, top_k=K, d_expert=D_EXPERT,
+                                     capacity_factor=0.0))
+
+
+def routed_x(kind: str, B: int, S: int, dtype, seed: int = 0):
+    """Tokens whose top-1 expert follows the requested distribution (the
+    router below is 6*eye, so logit_e = 6*x[:, e])."""
+    rng = np.random.default_rng(seed)
+    T = B * S
+    x = 0.05 * rng.standard_normal((T, D_MODEL))
+    if kind == "uniform":
+        tgt = rng.integers(0, E, T)
+    else:                                   # zipf(1.2), paper-style skew
+        p = 1.0 / np.arange(1, E + 1) ** 1.2
+        tgt = rng.choice(E, size=T, p=p / p.sum())
+    x[np.arange(T), tgt] += 3.0
+    return jnp.asarray(x.reshape(B, S, D_MODEL), dtype)
+
+
+def link_bytes(cap: int, itemsize: int, tp: int, with_counts: bool) -> int:
+    """Per-device on-link bytes for one MoE layer step: two bucket
+    all_to_alls of (E/tp rows per destination) x cap x d, of which
+    (tp-1)/tp actually crosses the link, plus the (tp, E/tp) int32 count
+    exchange for the ragged path."""
+    bucket = 2 * E * cap * D_MODEL * itemsize * (tp - 1) // tp
+    return bucket + (E * 4 * (tp - 1) // tp if with_counts else 0)
+
+
+def bench_one(kind: str, dtype: str, B: int, S: int, reps: int,
+              mesh) -> Dict:
+    cfg = make_cfg(dtype)
+    dt = jnp.dtype(cfg.dtype)
+    params = init_moe(jax.random.PRNGKey(0), cfg)
+    params = dict(params,
+                  router=6.0 * jnp.eye(D_MODEL, E, dtype=jnp.float32))
+    x = routed_x(kind, B, S, dt)
+    tp = mesh.shape["model"]
+    lmap = shd.logical_map_for(cfg, "prefill_32k", mesh)
+    with mesh, shd.rules(mesh, lmap, "tp"):
+        assert ep_applicable(cfg, B, S)
+        ragged = jax.jit(lambda p, x: apply_moe(p, x, cfg))
+        dense = jax.jit(lambda p, x: apply_moe(p, x, cfg,
+                                               force_exchange="dense"))
+        y_r, i_r = ragged(params, x)
+        y_d, i_d = dense(params, x)
+        t_ragged = time_fn(lambda: ragged(params, x), reps=reps)
+        t_dense = time_fn(lambda: dense(params, x), reps=reps)
+    C, cx = int(i_d["ep_cx"]), int(i_r["ep_cx"])
+    err = float(jnp.abs(y_r.astype(jnp.float32)
+                        - y_d.astype(jnp.float32)).max())
+    d_bytes = link_bytes(C, dt.itemsize, tp, with_counts=False)
+    r_bytes = link_bytes(cx, dt.itemsize, tp, with_counts=True)
+    return {
+        "routing": kind, "dtype": dtype, "B": B, "S": S,
+        "C": C, "cx": cx,
+        "dense_link_bytes": d_bytes, "ragged_link_bytes": r_bytes,
+        "byte_ratio": r_bytes / d_bytes,
+        "dense_us": t_dense, "ragged_us": t_ragged,
+        "parity_max_err": err, "atol": ATOL[dtype],
+        "parity_ok": err < ATOL[dtype],
+        "workload_equal": bool(np.array_equal(
+            np.asarray(i_r["workload"]), np.asarray(i_d["workload"]))),
+        "dropped_equal": int(i_r["dropped"]) == int(i_d["dropped"]),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced shapes + reps for CI")
+    ap.add_argument("--reps", type=int, default=0)
+    ap.add_argument("--json", default=None,
+                    help="output path (default reports/bench/"
+                         "BENCH_ep_exchange.json)")
+    args = ap.parse_args()
+    if len(jax.devices()) < 8:
+        raise SystemExit("ep_exchange needs 8 devices (host-platform "
+                         "forced; run as a fresh process)")
+    mesh = jax.make_mesh((1, 8), ("data", "model"))
+    B, S = (4, 160) if args.smoke else (8, 320)
+    dtypes = ("float32",) if args.smoke else ("float32", "bfloat16")
+    reps = args.reps or (5 if args.smoke else 20)
+
+    rows: List[Dict] = []
+    print("name,us_per_call,derived")
+    for dtype in dtypes:
+        for kind in ROUTINGS:
+            r = bench_one(kind, dtype, B, S, reps, mesh)
+            rows.append(r)
+            print(f"ep_exchange_dense_{kind}_{dtype},{r['dense_us']:.2f},"
+                  f"C={r['C']}")
+            print(f"ep_exchange_ragged_{kind}_{dtype},{r['ragged_us']:.2f},"
+                  f"cx={r['cx']} bytes={100 * r['byte_ratio']:.0f}%")
+            assert r["parity_ok"], (kind, dtype, r["parity_max_err"])
+            assert r["workload_equal"] and r["dropped_equal"], (kind, dtype)
+
+    from benchmarks.report_md import ep_exchange_table
+    print()
+    for line in ep_exchange_table(rows):
+        print(line)
+    skewed = [r for r in rows if r["routing"] == "zipf"]
+    worst = max(r["byte_ratio"] for r in skewed)
+    print(f"\nzipf worst-case ragged/dense link bytes: {100 * worst:.0f}%")
+
+    out = args.json or os.path.join(BENCH_DIR, "BENCH_ep_exchange.json")
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump({"backend": jax.default_backend(), "tp": 8,
+                   "E": E, "top_k": K, "d_model": D_MODEL,
+                   "d_expert": D_EXPERT, "smoke": bool(args.smoke),
+                   "reps": reps, "rows": rows}, f, indent=2)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

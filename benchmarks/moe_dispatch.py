@@ -19,13 +19,12 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
 from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from benchmarks.common import time_fn
 from repro.models.config import ModelConfig, MoEConfig
 from repro.models.moe import apply_moe, expert_capacity, init_moe
 
@@ -44,18 +43,6 @@ def layer_cfg(E: int) -> ModelConfig:
                        dtype="float32", param_dtype="float32",
                        moe=MoEConfig(n_routed=E, top_k=TOP_K,
                                      d_expert=D_EXPERT))
-
-
-def time_fn(fn, *args, reps: int = 30, warmup: int = 3) -> float:
-    """Median wall µs/call, jit-warmed, device-synchronised."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts) * 1e6)
 
 
 def bench_one(E: int, B: int, reps: int) -> Dict:

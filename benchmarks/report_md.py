@@ -92,6 +92,7 @@ def main():
 
     serving_section()
     moe_dispatch_section()
+    ep_exchange_section()
 
 
 def moe_dispatch_section():
@@ -128,6 +129,44 @@ def moe_dispatch_table(rows):
         out.append(f"| {r['E']} | {r['batch']} | {r['dense_us']:.1f} "
                    f"| {r['sparse_us']:.1f} | {r['speedup']:.2f}x "
                    f"| {r['dense_rows']} | {r['sparse_rows']} |")
+    return out
+
+
+def ep_exchange_section():
+    """§EP exchange: workload-sized ragged all_to_all vs the dense
+    full-capacity exchange (benchmarks/ep_exchange.py, DESIGN.md §6).
+
+    Reading the columns: the dense path ships E x C bucket rows through
+    both all_to_alls every step; the ragged path exchanges counts first
+    and ships E x C_x, the smallest static ladder rung covering the
+    step's global max per-(device, expert) demand.  bytes% is the
+    analytic on-link traffic ratio (incl. the count exchange); host-CPU
+    µs tracks dispatch/compute savings, not a real interconnect."""
+    f = os.path.join(BENCH_DIR, "BENCH_ep_exchange.json")
+    if not os.path.exists(f):
+        return
+    rec = json.load(open(f))
+    print("\n### EP exchange: ragged (workload-sized) vs dense all_to_all\n")
+    print(f"(backend={rec['backend']}, tp={rec['tp']}, E={rec['E']}, "
+          f"d_model={rec['d_model']}, smoke={rec['smoke']})\n")
+    for line in ep_exchange_table(rec["rows"]):
+        print(line)
+    print("\n(C_x: exchanged bucket capacity, picked per step from the "
+          "static ladder by the count exchange — see "
+          "repro/models/moe_ep.py.)")
+
+
+def ep_exchange_table(rows):
+    """Markdown table lines for ep_exchange records (single source of the
+    column layout — the benchmark's stdout uses it too)."""
+    out = ["| routing | dtype | C | C_x | link bytes | dense µs | "
+           "ragged µs | parity |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(f"| {r['routing']} | {r['dtype']} | {r['C']} "
+                   f"| {r['cx']} | {100 * r['byte_ratio']:.0f}% "
+                   f"| {r['dense_us']:.0f} | {r['ragged_us']:.0f} "
+                   f"| {r['parity_max_err']:.1e} |")
     return out
 
 

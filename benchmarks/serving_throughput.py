@@ -111,11 +111,19 @@ def main():
     ap.add_argument("--servers", default="both",
                     choices=["both"] + sorted(SERVER_PRESETS))
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced workload + calibration training for CI "
+                         "tier-2 (recorded in the trajectory JSON so a "
+                         "smoke row is never diffed against a full run)")
     ap.add_argument("--json", default=None,
                     help="output path (default reports/serving/<arch>.json)")
     args = ap.parse_args()
+    if args.smoke:
+        args.requests = min(args.requests, 8)
+        args.max_prompt = min(args.max_prompt, 24)
+        args.max_new = min(args.max_new, 12)
 
-    bm = load_model(args.arch)
+    bm = load_model(args.arch, train_steps=60 if args.smoke else 150)
     workload = make_workload(bm, args.requests, args.min_prompt,
                              args.max_prompt, args.min_new, args.max_new,
                              args.rate, args.seed)
@@ -181,7 +189,8 @@ def main():
     workload = {
         "requests": args.requests, "batch": args.batch, "rate": args.rate,
         "prompt": [args.min_prompt, args.max_prompt],
-        "new": [args.min_new, args.max_new], "max_len": args.max_len}
+        "new": [args.min_new, args.max_new], "max_len": args.max_len,
+        "smoke": bool(args.smoke)}
     merged.setdefault(args.arch, {}).update({
         k: {"decode_tok_s": round(r["decode_tok_s"], 2),
             "total_tok_s": round(r["total_tok_s"], 2),

@@ -24,7 +24,15 @@ so capacity blocks holding no real tokens skip their MXU work entirely
 (MegaBlocks-style skip-empty; block DMAs still stream — the index maps are
 unconditional).  Rows at/beyond counts[e] inside a partial block are
 zeroed before the matmuls, so garbage in a bucket tail can never leak
-into the output."""
+into the output.
+
+The grouped variant (``expert_ids``) generalises ragged to G row groups
+sharing E weight sets: xe (G, C, d) with counts (G,) and a scalar-
+prefetched group→expert map, whose ids drive the WEIGHT block index maps
+(no gathered/replicated weight copies).  This is the expert-parallel
+entry: each received bucket (source device, local expert) is one group
+(models/moe_ep.py), so blocks a remote device sent empty skip their MXU
+work exactly like local empty buckets."""
 from __future__ import annotations
 
 import functools
@@ -77,6 +85,15 @@ def _kernel_ragged(counts_ref, x_ref, wg_ref, wu_ref, wd_ref, o_ref, *,
                             preferred_element_type=jnp.float32)
 
 
+def _kernel_grouped(counts_ref, eids_ref, x_ref, wg_ref, wu_ref, wd_ref,
+                    o_ref, *, act, bc):
+    # identical compute to _kernel_ragged; eids_ref is consumed by the
+    # weight BlockSpec index maps, not the body
+    del eids_ref
+    _kernel_ragged(counts_ref, x_ref, wg_ref, wu_ref, wd_ref, o_ref,
+                   act=act, bc=bc)
+
+
 def _sublane(dtype) -> int:
     """Minimum second-minor tile dim per dtype (TPU layout constraint)."""
     return {jnp.dtype(jnp.bfloat16): 16, jnp.dtype(jnp.int8): 32}.get(
@@ -99,12 +116,18 @@ def _block_size(n: int, target: int, unit: int = 1) -> int:
                                              "interpret"))
 def expert_ffn(xe, w_gate, w_up, w_down, counts=None, act: str = "silu",
                block_c: int = 128, block_f: int = 512,
-               interpret: bool = False):
+               interpret: bool = False, expert_ids=None):
     """xe (E, C, d); w_gate/w_up (E, d, f); w_down (E, f, d) -> (E, C, d).
 
     With ``counts`` (E,) int32 — tokens actually packed per expert — the
     ragged skip-empty kernel runs; blocks entirely above counts[e] produce
-    zeros without touching the MXU."""
+    zeros without touching the MXU.
+
+    With ``expert_ids`` (G,) int32 as well, xe is (G, C, d) row groups and
+    group g computes against weight set expert_ids[g] (expert-parallel
+    receive buckets: one group per (source device, local expert))."""
+    if expert_ids is not None and counts is None:
+        raise ValueError("expert_ids requires counts (grouped ragged)")
     E, C, d = xe.shape
     f = w_gate.shape[-1]
     # pad the sublane-facing dims (token rows; f as Wd's row dim) to the
@@ -140,6 +163,35 @@ def expert_ffn(xe, w_gate, w_up, w_down, counts=None, act: str = "silu",
             out_shape=out_shape,
             interpret=interpret,
         )(xe, w_gate, w_up, w_down)
+        return y[:, :C_in].astype(xe.dtype)
+
+    if expert_ids is not None:
+        # grouped ragged: counts AND the group→expert map ride ahead of
+        # the grid as scalar-prefetch operands (SMEM); the map drives the
+        # weight index maps so no gathered weight copies materialise
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bc, d),
+                             lambda g, ci, fi, c, eid: (g, ci, 0)),
+                pl.BlockSpec((1, d, bf),
+                             lambda g, ci, fi, c, eid: (eid[g], 0, fi)),
+                pl.BlockSpec((1, d, bf),
+                             lambda g, ci, fi, c, eid: (eid[g], 0, fi)),
+                pl.BlockSpec((1, bf, d),
+                             lambda g, ci, fi, c, eid: (eid[g], fi, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bc, d),
+                                   lambda g, ci, fi, c, eid: (g, ci, 0)),
+        )
+        y = pl.pallas_call(
+            functools.partial(_kernel_grouped, act=act, bc=bc),
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(counts.astype(jnp.int32), expert_ids.astype(jnp.int32),
+          xe, w_gate, w_up, w_down)
         return y[:, :C_in].astype(xe.dtype)
 
     # ragged: counts ride ahead of the grid as a scalar-prefetch operand

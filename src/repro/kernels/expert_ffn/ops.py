@@ -4,24 +4,73 @@ elsewhere (or interpret=True for kernel-path testing on CPU).
 ``counts`` (E,) int32 selects the ragged skip-empty variant: capacity
 blocks holding no real tokens skip their MXU work on TPU (pl.when), and
 the oracle masks the same rows — empty/skewed workloads cost what they
-contain, not E x C."""
+contain, not E x C.  ``expert_ids`` (G,) additionally maps G row groups
+onto the E weight sets (the expert-parallel receive-bucket entry —
+models/moe_ep.py).
+
+The kernel path is wrapped in a custom VJP — kernel forward, einsum
+oracle backward — because ``pallas_call`` has no autodiff rule: without
+it any grad through the TPU paths (single-device dense, EP receive-side)
+would raise, and both are on train_step's path."""
 from __future__ import annotations
 
+import functools
+
 import jax
+import numpy as np
 
 from .kernel import expert_ffn as expert_ffn_pallas
 from .ref import expert_ffn_ragged_ref, expert_ffn_ref
 
 
+def _oracle(xe, w_gate, w_up, w_down, counts, expert_ids, act):
+    if counts is None:
+        return expert_ffn_ref(xe, w_gate, w_up, w_down, act=act)
+    return expert_ffn_ragged_ref(xe, w_gate, w_up, w_down, counts,
+                                 act=act, expert_ids=expert_ids)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def _kernel_call(xe, w_gate, w_up, w_down, counts, expert_ids,
+                 act, interpret):
+    return expert_ffn_pallas(xe, w_gate, w_up, w_down, counts=counts,
+                             act=act, expert_ids=expert_ids,
+                             interpret=interpret)
+
+
+def _kernel_call_fwd(xe, w_gate, w_up, w_down, counts, expert_ids,
+                     act, interpret):
+    y = _kernel_call(xe, w_gate, w_up, w_down, counts, expert_ids,
+                     act, interpret)
+    return y, (xe, w_gate, w_up, w_down, counts, expert_ids)
+
+
+def _kernel_call_bwd(act, interpret, res, g):
+    # recompute through the differentiable oracle (the kernel and the
+    # oracle agree on every kept row; dropped/tail rows carry no
+    # gradient either way because their forward value is masked to zero)
+    xe, w_gate, w_up, w_down, counts, expert_ids = res
+    _, vjp = jax.vjp(
+        lambda x, wg, wu, wd: _oracle(x, wg, wu, wd, counts, expert_ids,
+                                      act),
+        xe, w_gate, w_up, w_down)
+    dxe, dwg, dwu, dwd = vjp(g)
+    # int operands take float0 cotangents
+    zero = lambda a: (None if a is None
+                      else np.zeros(a.shape, jax.dtypes.float0))
+    return dxe, dwg, dwu, dwd, zero(counts), zero(expert_ids)
+
+
+_kernel_call.defvjp(_kernel_call_fwd, _kernel_call_bwd)
+
+
 def expert_ffn_op(xe, w_gate, w_up, w_down, act: str = "silu",
-                  counts=None, force_kernel: bool = False,
+                  counts=None, expert_ids=None, force_kernel: bool = False,
                   interpret: bool | None = None):
     on_tpu = jax.default_backend() == "tpu"
     if on_tpu or force_kernel:
-        return expert_ffn_pallas(xe, w_gate, w_up, w_down, counts=counts,
-                                 act=act,
-                                 interpret=(not on_tpu) if interpret is None
-                                 else interpret)
-    if counts is None:
-        return expert_ffn_ref(xe, w_gate, w_up, w_down, act=act)
-    return expert_ffn_ragged_ref(xe, w_gate, w_up, w_down, counts, act=act)
+        return _kernel_call(xe, w_gate, w_up, w_down, counts, expert_ids,
+                            act,
+                            (not on_tpu) if interpret is None
+                            else interpret)
+    return _oracle(xe, w_gate, w_up, w_down, counts, expert_ids, act)

@@ -21,11 +21,18 @@ def expert_ffn_ref(xe, w_gate, w_up, w_down, act: str = "silu"):
 
 
 def expert_ffn_ragged_ref(xe, w_gate, w_up, w_down, counts,
-                          act: str = "silu"):
+                          act: str = "silu", expert_ids=None):
     """Ragged oracle: rows at/beyond ``counts[e]`` are empty capacity
     padding — masked on the way in AND the way out, so the result matches
     the skip-empty kernel even when the caller left garbage in a bucket's
-    unused tail.  counts (E,) int32 -> (E, C, d)."""
+    unused tail.  counts (E,) int32 -> (E, C, d).
+
+    With ``expert_ids`` (G,) int32, xe is (G, C, d) row groups and group g
+    uses weight set expert_ids[g] (the grouped kernel's oracle; here the
+    gathered weight copies are fine — it is the reference)."""
+    if expert_ids is not None:
+        w_gate, w_up, w_down = (w[expert_ids]
+                                for w in (w_gate, w_up, w_down))
     C = xe.shape[1]
     row_valid = jnp.arange(C)[None, :] < counts[:, None]          # (E, C)
     y = expert_ffn_ref(jnp.where(row_valid[..., None], xe, 0),

@@ -173,8 +173,42 @@ def _workload_counts(flat_e, E, valid_rep):
     return jnp.bincount(jnp.where(valid_rep, flat_e, E), length=E + 1)[:E]
 
 
+def local_dispatch(xf, idx, E, K, C, valid_rep=None):
+    """Sort/gather capacity-bucket dispatch (the one copy of the index
+    math — the single-device dense path and the EP shard body both use
+    it).  Invalid (token, k) slots sort into a virtual expert E so they
+    never occupy a capacity slot nor count toward the workload.
+
+    Returns ``(xe, counts, se, rank, inv)``: the (E, C, d) buckets with
+    rows at/beyond the packed count zero-filled, the raw per-expert
+    demand, and the combine contract — sorted-slot expert keys ``se``
+    (E for invalid slots), in-expert ranks ``rank``, and the inverse
+    permutation ``inv`` mapping sorted slots back to (token, k) order —
+    so callers never re-derive the argsort inversion."""
+    T = xf.shape[0]
+    flat_e = idx.reshape(-1)                   # (T*K,) expert ids, k-minor
+    flat_t = jnp.repeat(jnp.arange(T), K)      # source token per slot
+    key = flat_e if valid_rep is None else jnp.where(valid_rep, flat_e, E)
+    order = jnp.argsort(key, stable=True)      # group by expert
+    se, st = key[order], flat_t[order]
+    counts_ext = jnp.bincount(key, length=E + 1)
+    counts = counts_ext[:E]                                       # workload
+    offsets = jnp.concatenate([jnp.zeros((1,), counts_ext.dtype),
+                               jnp.cumsum(counts_ext)[:-1]])
+    rank = jnp.arange(T * K) - offsets[se]     # rank within expert group
+    # gather tokens into (E, C) capacity buckets
+    pos = offsets[:E, None] + jnp.arange(C)[None, :]              # (E, C)
+    bucket_valid = jnp.arange(C)[None, :] < jnp.minimum(counts[:, None], C)
+    src = st[jnp.clip(pos, 0, T * K - 1)]                         # (E, C)
+    xe = jnp.where(bucket_valid[..., None], xf[src], 0)
+    inv = jnp.zeros((T * K,), jnp.int32).at[order].set(
+        jnp.arange(T * K, dtype=jnp.int32))
+    return xe, counts, se, rank, inv
+
+
 def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None,
-              valid=None, force_path: Optional[str] = None):
+              valid=None, force_path: Optional[str] = None,
+              force_exchange: Optional[str] = None):
     """Returns (y, info) where info carries DALI's routing observables.
 
     ``valid`` (T,) bool marks real tokens (None = all real): padded tokens
@@ -183,16 +217,22 @@ def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None,
     is garbage the caller slices off — the chunked path below does).
     ``force_path`` pins the execution path ("dense" | "sparse") for tests
     and benchmarks; by default ``use_sparse_path`` selects statically from
-    shapes."""
+    shapes.  ``force_exchange`` pins the expert-parallel exchange flavor
+    ("dense" | "ragged", see moe_ep.apply_moe_ep) and only matters when
+    the EP path is taken."""
     from repro.launch.sharding import hint
     from repro.models.moe_ep import apply_moe_ep, ep_applicable
+    if force_path not in (None, "dense", "sparse"):
+        raise ValueError(f"force_path must be None|'dense'|'sparse', "
+                         f"got {force_path!r}")
     m = cfg.moe
     B, S, d = x.shape
     T_all = B * S
     if force_path is None and valid is None and ep_applicable(cfg, B, S):
         # production path under an active mesh: shard_map expert-parallel
         # all-to-all dispatch (see moe_ep.py / EXPERIMENTS.md §Perf)
-        return apply_moe_ep(params, x, cfg, capacity=capacity)
+        return apply_moe_ep(params, x, cfg, capacity=capacity,
+                            force_exchange=force_exchange)
     if T_all > MOE_CHUNK_TOKENS:
         n_chunks = -(-T_all // MOE_CHUNK_TOKENS)
         T_pad = n_chunks * MOE_CHUNK_TOKENS
@@ -252,44 +292,23 @@ def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None,
     else:
         C = capacity if capacity is not None else expert_capacity(m, T)
         # ---- sort-based dispatch (gather-only; no float scatters) -------
-        flat_e = idx.reshape(-1)                   # (T*K,) expert ids, k-minor
-        flat_t = jnp.repeat(jnp.arange(T), K)      # source token per slot
-        # padded tokens sort into a virtual expert E: they never occupy a
-        # capacity slot and never count toward the workload
-        flat_key = flat_e if vrep is None else jnp.where(vrep, flat_e, E)
-        order = jnp.argsort(flat_key, stable=True)  # group by expert
-        se, st = flat_key[order], flat_t[order]
-        counts_ext = jnp.bincount(flat_key, length=E + 1)
-        counts = counts_ext[:E]                                   # workload
-        offsets = jnp.concatenate([jnp.zeros((1,), counts_ext.dtype),
-                                   jnp.cumsum(counts_ext)[:-1]])
-        rank = jnp.arange(T * K) - offsets[se]     # rank within expert group
-
-        # gather tokens into (E, C) capacity buckets
-        pos = offsets[:E, None] + jnp.arange(C)[None, :]          # (E, C)
-        bucket_valid = jnp.arange(C)[None, :] < jnp.minimum(counts[:, None], C)
-        src_tok = st[jnp.clip(pos, 0, T * K - 1)]                 # (E, C)
-        xe = jnp.where(bucket_valid[..., None], xf[src_tok], 0)
+        xe, counts, se, rank, inv = local_dispatch(xf, idx, E, K, C,
+                                                   valid_rep=vrep)
 
         xe = hint(xe, "experts", "cap", "embed")
         ye = expert_ffn_dense(params, xe, cfg, counts=counts)     # (E,C,d)
         ye = hint(ye, "experts", "cap", "embed")
 
-        # gather results back per (token, k) slot: invert the sort with an
-        # int32 scatter (cheap), then weighted-sum over the K choices.
-        inv = jnp.zeros((T * K,), jnp.int32).at[order].set(
-            jnp.arange(T * K, dtype=jnp.int32))
-        rank_tk = rank[inv]                                       # (T*K,)
-        keep = rank_tk < C
-        if vrep is not None:
-            keep = keep & vrep
-        contrib = ye[flat_e, jnp.where(keep, rank_tk, 0)]         # (T*K, d)
-        contrib = hint(jnp.where(keep[:, None], contrib, 0),
+        # gather results back in sorted-slot order, zero dropped/invalid
+        # slots (se == E marks padding), un-sort via inv, then
+        # weighted-sum over the K choices.
+        keep_s = (rank < C) & (se < E)
+        contrib = ye[jnp.clip(se, 0, E - 1), jnp.clip(rank, 0, C - 1)]
+        contrib = hint(jnp.where(keep_s[:, None], contrib, 0)[inv],
                        "tokens", "embed")
         y = jnp.sum(contrib.reshape(T, K, d)
                     * gates.astype(contrib.dtype)[..., None], axis=1)
-        dropped = (jnp.sum(~keep) if vrep is None
-                   else jnp.sum(vrep & ~keep)).astype(jnp.int32)
+        dropped = jnp.sum((se < E) & (rank >= C)).astype(jnp.int32)
     y = hint(y.astype(x.dtype), "tokens", "embed")
 
     if m.n_shared:

@@ -1,5 +1,5 @@
-"""Expert-parallel MoE via shard_map + all-to-all (the production dispatch
-path; EXPERIMENTS.md §Perf).
+"""Expert-parallel MoE via shard_map + all_to_all (the production dispatch
+path; EXPERIMENTS.md §Perf), with a workload-sized ragged exchange.
 
 GSPMD cannot partition data-dependent gather/scatter dispatch — it falls
 back to replicating token- and bucket-sized buffers and all-gathering them
@@ -9,24 +9,34 @@ pair).  This module instead expresses the dispatch *per device*:
   1. tokens are split (batch over data/pod, sequence over model),
   2. each device routes its own tokens and packs per-expert capacity
      buckets locally (sort/gather, zero collectives),
-  3. one ``all_to_all`` over 'model' ships each bucket to the expert's
-     owner; experts compute; a second ``all_to_all`` ships results back,
-  4. results combine locally; the (B, S, d) output re-enters the GSPMD
+  3. a tiny ``(tp, E/tp)`` int32 ``all_to_all`` ships every device's
+     per-expert demand to the expert owners FIRST; its global max picks
+     the smallest rung of a static capacity ladder (DESIGN.md §6), and
+     only ``(E/tp, C_x, d)`` of each bucket goes through the data
+     ``all_to_all`` — link bytes scale with the actual workload instead
+     of the worst-case capacity C,
+  4. experts compute their received buckets; on TPU the ragged grouped
+     kernel (kernels/expert_ffn) takes the exchanged counts plus a
+     group→expert id map so fully-empty (group, ci) blocks skip their
+     MXU work; a second, symmetric ``all_to_all`` ships results back,
+  5. results combine locally; the (B, S, d) output re-enters the GSPMD
      world through the out_specs.
 
 Collectives per layer drop from O(all-gather everything) to
-2 x all_to_all(T_local·K·cf·d / tp) + the output reshard.
+2 x all_to_all(E·C_x·d / tp) + one (tp, E/tp) int32 count exchange + the
+output reshard, where C_x = next_pow2(global max per-(device, expert)
+demand) clamped to C — a fraction of C for decode/skewed traffic.
 
 Used automatically by ``apply_moe`` when sharding rules are active,
 E % tp == 0 and the token dims divide; decode and single-device runs keep
-the dense path.  Differentiable (all_to_all transposes to all_to_all), so
-train_step uses it too.  FSDP expert weights are all-gathered over 'data'
-once per layer inside the shard (explicit, instead of per-buffer GSPMD
-gathers).
+the dense path.  Differentiable (each all_to_all transposes to an
+all_to_all inside its own ladder branch), so train_step uses it too.
+FSDP expert weights are all-gathered over 'data' once per layer inside
+the shard (explicit, instead of per-buffer GSPMD gathers).
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -56,36 +66,70 @@ def ep_applicable(cfg: ModelConfig, B: int, S: int) -> bool:
     return True
 
 
-def _local_dispatch(xf, gates, idx, E, K, C, d):
-    """Sort/gather capacity-bucket dispatch on purely local data."""
-    T = xf.shape[0]
-    flat_e = idx.reshape(-1)
-    flat_t = jnp.repeat(jnp.arange(T), K)
-    order = jnp.argsort(flat_e, stable=True)
-    se, st_ = flat_e[order], flat_t[order]
-    counts = jnp.bincount(flat_e, length=E)
-    offsets = jnp.concatenate([jnp.zeros((1,), counts.dtype),
-                               jnp.cumsum(counts)[:-1]])
-    rank = jnp.arange(T * K) - offsets[se]
-    pos = offsets[:E, None] + jnp.arange(C)[None, :]
-    valid = jnp.arange(C)[None, :] < jnp.minimum(counts[:, None], C)
-    src = st_[jnp.clip(pos, 0, T * K - 1)]
-    xe = jnp.where(valid[..., None], xf[src], 0)
-    inv = jnp.zeros((T * K,), jnp.int32).at[order].set(
-        jnp.arange(T * K, dtype=jnp.int32))
-    rank_tk = rank[inv]
-    keep = rank_tk < C
-    return xe, counts, flat_e, rank_tk, keep
+def exchange_ladder(C: int) -> List[int]:
+    """Static bucket capacities the ragged exchange can ship: powers of two
+    from the dispatch bucket floor (4) upward, clamped to C.  Each rung is
+    one jitted exchange shape; the per-step pick is the smallest rung
+    covering the global max per-(device, expert) demand, so XLA always
+    sees static shapes while the common skewed/decode case ships a
+    fraction of C (DESIGN.md §6)."""
+    caps, c = [], 4
+    while c < C:
+        caps.append(c)
+        c *= 2
+    caps.append(C)
+    return caps
+
+
+def _ep_expert_ffn(xa, wg, wu, wd, cnt_rx, cfg: ModelConfig):
+    """Expert FFN over received buckets xa (E/tp, tp, C_x, d).
+
+    With exchanged counts ``cnt_rx`` (tp, E/tp) on TPU, the ragged grouped
+    kernel runs with one (source, expert) group per bucket and a
+    group→expert id map, so blocks holding no real tokens skip their MXU
+    work.  Elsewhere (and with ``cnt_rx=None``, the dense exchange) the
+    einsum sweep runs — bucket rows beyond the packed count are exact
+    zeros, so both paths agree on every kept row."""
+    from repro.models.layers import _ACTS
+    E_loc, tp, Cx, d = xa.shape
+    if cnt_rx is not None and jax.default_backend() == "tpu":
+        from repro.kernels.expert_ffn.ops import expert_ffn_op
+        groups = xa.reshape(E_loc * tp, Cx, d)
+        gcnt = jnp.transpose(cnt_rx).reshape(-1).astype(jnp.int32)
+        eids = jnp.repeat(jnp.arange(E_loc, dtype=jnp.int32), tp)
+        y = expert_ffn_op(groups, wg, wu, wd, act=cfg.act, counts=gcnt,
+                          expert_ids=eids)
+        return y.reshape(E_loc, tp, Cx, d)
+    act = _ACTS[cfg.act]
+    xr = xa.reshape(E_loc, tp * Cx, d)
+    h = act(jnp.einsum("ecd,edf->ecf", xr, wg)) \
+        * jnp.einsum("ecd,edf->ecf", xr, wu)
+    return jnp.einsum("ecf,efd->ecd", h, wd).reshape(E_loc, tp, Cx, d)
 
 
 def apply_moe_ep(params, x, cfg: ModelConfig, *,
-                 capacity: Optional[int] = None):
-    """shard_map expert-parallel MoE.  x (B,S,d) -> (y, info)."""
+                 capacity: Optional[int] = None,
+                 force_exchange: Optional[str] = None):
+    """shard_map expert-parallel MoE.  x (B,S,d) -> (y, info).
+
+    ``capacity`` (stated for the full batch, like apply_moe's) scales to
+    each device's token share; None derives the per-device capacity from
+    the shard size.  ``force_exchange`` pins the exchange flavor for
+    tests/benchmarks:
+    "dense" ships the full (E/tp, C, d) buckets (the pre-ragged path,
+    bit-identical combine), "ragged"/None sizes the exchange to the
+    workload via the count exchange + capacity ladder.  Observables
+    (workload / aux / z / dropped) are identical either way; the ragged
+    path additionally reports the shipped capacity as ``info["ep_cx"]``.
+    """
     from jax.experimental.shard_map import shard_map
     from repro.launch import sharding as shd
-    from repro.models.layers import _ACTS, apply_mlp
-    from repro.models.moe import expert_capacity, route
+    from repro.models.layers import apply_mlp
+    from repro.models.moe import expert_capacity, local_dispatch, route
 
+    if force_exchange not in (None, "dense", "ragged"):
+        raise ValueError(f"force_exchange must be None|'dense'|'ragged', "
+                         f"got {force_exchange!r}")
     st = shd.active()
     mesh = st["mesh"]
     fsdp = st["wmode"] == "fsdp"
@@ -98,8 +142,18 @@ def apply_moe_ep(params, x, cfg: ModelConfig, *,
     for a in dp_axes:
         dp *= mesh.shape[a]
     T_my = (B // dp) * (S // tp)
-    C = expert_capacity(m, T_my)
+    if capacity is None:
+        C = expert_capacity(m, T_my)
+    else:
+        # an explicit capacity is stated for the full (B, S) batch
+        # (apply_moe's contract; dry-run shape lowering pins it) — each
+        # device packs its T_my-token share, so scale the pin to the
+        # shard, keeping the 4-row tiling floor
+        share = -(-capacity * T_my // (B * S))
+        C = max(4, -(-share // 4) * 4)
     dpa = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    ragged = force_exchange != "dense"
+    caps = exchange_ladder(C)
 
     fs = "data" if fsdp else None
     w_spec = P("model", None, fs)
@@ -117,33 +171,61 @@ def apply_moe_ep(params, x, cfg: ModelConfig, *,
         # xb: (B/dp, S/tp, d) — this device's tokens
         xf = xb.reshape(-1, d)
         gates, idx, probs, logits = route({"router": router}, xf, m)
-        xe, counts, flat_e, rank_tk, keep = _local_dispatch(
-            xf, gates, idx, E, K, C, d)
+        xe, counts, se, rank, inv = local_dispatch(xf, idx, E, K, C)
 
         if fsdp:    # materialise full expert weights once, explicitly
             wg = jax.lax.all_gather(wg, "data", axis=2, tiled=True)
             wu = jax.lax.all_gather(wu, "data", axis=2, tiled=True)
             wd = jax.lax.all_gather(wd, "data", axis=1, tiled=True)
 
-        # ship buckets to expert owners.  split==concat axis keeps the
-        # all_to_all self-transposing (AD-safe): dim0 switches meaning
-        # from destination-block to source-block.
-        xa = jax.lax.all_to_all(xe.reshape(tp, E // tp, C, d), "model",
-                                split_axis=0, concat_axis=0)
-        xa = jnp.moveaxis(xa, 0, 1).reshape(E // tp, tp * C, d)
+        def exchange(cx, cnt_rx):
+            """Ship cx-row buckets to expert owners, compute, ship back.
+            split==concat axis keeps each all_to_all self-transposing
+            (AD-safe): dim0 switches meaning from destination-block to
+            source-block.  Returns per-slot contributions in sorted
+            order, a shape shared by every ladder rung."""
+            def run(xe_):
+                xa = jax.lax.all_to_all(
+                    xe_[:, :cx].reshape(tp, E // tp, cx, d), "model",
+                    split_axis=0, concat_axis=0)
+                ye = _ep_expert_ffn(jnp.moveaxis(xa, 0, 1), wg, wu, wd,
+                                    cnt_rx, cfg)       # (E/tp, tp, cx, d)
+                # symmetric return exchange to the original token owner
+                ya = jax.lax.all_to_all(jnp.moveaxis(ye, 1, 0), "model",
+                                        split_axis=0, concat_axis=0)
+                ye_loc = ya.reshape(E, cx, d)
+                return ye_loc[se, jnp.clip(rank, 0, cx - 1)]   # (T*K, d)
+            return run
 
-        act = _ACTS[cfg.act]
-        h = act(jnp.einsum("ecd,edf->ecf", xa, wg)) \
-            * jnp.einsum("ecd,edf->ecf", xa, wu)
-        ye = jnp.einsum("ecf,efd->ecd", h, wd)          # (E/tp, tp*C, d)
+        if not ragged:
+            contrib_s = exchange(C, None)(xe)
+            cx_used = jnp.asarray(C, jnp.int32)
+        else:
+            # (1) tiny count exchange: every expert owner learns each
+            # source device's per-expert demand before bucket data moves
+            cnt = jnp.minimum(counts, C).astype(jnp.int32)
+            cnt_rx = jax.lax.all_to_all(cnt.reshape(tp, E // tp), "model",
+                                        split_axis=0, concat_axis=0)
+            # (2) workload-sized capacity: smallest ladder rung covering
+            # the global max demand; pmax over every mesh axis so all
+            # devices take the SAME branch (collectives inside a branch
+            # are only correct if all participants agree on it)
+            gmax = jax.lax.pmax(jnp.max(cnt), ("model",) + dp_axes)
+            caps_arr = jnp.asarray(caps, jnp.int32)
+            sel = jnp.minimum(jnp.searchsorted(caps_arr, gmax),
+                              len(caps) - 1)
+            if len(caps) == 1:
+                contrib_s = exchange(C, cnt_rx)(xe)
+            else:
+                contrib_s = jax.lax.switch(
+                    sel, [exchange(c, cnt_rx) for c in caps], xe)
+            cx_used = caps_arr[sel]
 
-        # inverse exchange back to the original token owner
-        ya = jnp.moveaxis(ye.reshape(E // tp, tp, C, d), 1, 0)
-        ya = jax.lax.all_to_all(ya, "model", split_axis=0, concat_axis=0)
-        ye_loc = ya.reshape(E, C, d)
-
-        contrib = ye_loc[flat_e, jnp.where(keep, rank_tk, 0)]
-        contrib = jnp.where(keep[:, None], contrib, 0)
+        # combine: rows the dense C-bucket would drop stay dropped (the
+        # ladder rung always covers every kept rank, so cx never drops
+        # more — keep/dropped are bit-identical to the dense exchange)
+        keep_s = rank < C
+        contrib = jnp.where(keep_s[:, None], contrib_s, 0)[inv]
         y = jnp.sum(contrib.reshape(-1, K, d)
                     * gates.astype(contrib.dtype)[..., None], axis=1)
         y = y.astype(xb.dtype)
@@ -163,7 +245,7 @@ def apply_moe_ep(params, x, cfg: ModelConfig, *,
         z = jax.lax.pmean(
             jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
             ("model",) + dp_axes)
-        dropped = jax.lax.psum(jnp.sum(~keep).astype(jnp.int32),
+        dropped = jax.lax.psum(jnp.sum(~keep_s).astype(jnp.int32),
                                ("model",) + dp_axes)
         Bl, Sl = xb.shape[0], xb.shape[1]
         info = {
@@ -175,6 +257,7 @@ def apply_moe_ep(params, x, cfg: ModelConfig, *,
             "aux_loss": aux * m.aux_loss_weight,
             "z_loss": z * m.router_z_weight,
             "dropped": dropped,
+            "ep_cx": cx_used,
         }
         return y.reshape(Bl, Sl, d), info
 
@@ -182,7 +265,7 @@ def apply_moe_ep(params, x, cfg: ModelConfig, *,
     info_specs = {
         "workload": P(None), "topk_idx": tok3, "gates": tok3,
         "probs": tok3, "gate_in": tok3,
-        "aux_loss": P(), "z_loss": P(), "dropped": P(),
+        "aux_loss": P(), "z_loss": P(), "dropped": P(), "ep_cx": P(),
     }
     fn = shard_map(
         body, mesh=mesh,

@@ -212,6 +212,66 @@ def test_expert_ffn_nondivisible_shapes():
                                rtol=3e-2, atol=3e-2)
 
 
+def test_expert_ffn_grouped_matches_gathered_oracle():
+    """The grouped variant (G row groups sharing E weight sets via a
+    scalar-prefetched group→expert map — the EP receive-bucket entry,
+    moe_ep._ep_expert_ffn) must match the gathered-weight oracle,
+    including fully-empty groups and partial tails."""
+    E, G, C, d, f = 3, 6, 32, 16, 48
+    xe = jnp.asarray(RNG.standard_normal((G, C, d)), jnp.float32)
+    wg = jnp.asarray(RNG.standard_normal((E, d, f)) * 0.1, jnp.float32)
+    wu = jnp.asarray(RNG.standard_normal((E, d, f)) * 0.1, jnp.float32)
+    wd = jnp.asarray(RNG.standard_normal((E, f, d)) * 0.1, jnp.float32)
+    cnt = jnp.asarray([0, 32, 7, 0, 12, 1], jnp.int32)
+    eids = jnp.asarray([0, 0, 1, 1, 2, 2], jnp.int32)
+    y = expert_ffn(xe, wg, wu, wd, counts=cnt, expert_ids=eids,
+                   block_c=16, block_f=32, interpret=True)
+    r = expert_ffn_ragged_ref(xe, wg, wu, wd, cnt, expert_ids=eids)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r),
+                               rtol=1e-5, atol=1e-6)
+    # rows at/beyond each group's count are exactly zero
+    rows = np.asarray(jnp.arange(C)[None, :] >= cnt[:, None])
+    assert not np.asarray(y)[rows].any()
+    # groups mapping to the same expert with equal inputs agree
+    xe2 = xe.at[3].set(xe[2])
+    y2 = expert_ffn(xe2, wg, wu, wd,
+                    counts=jnp.asarray([0, 32, 7, 7, 12, 1], jnp.int32),
+                    expert_ids=eids, block_c=16, block_f=32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y2[2]), np.asarray(y2[3]))
+    with pytest.raises(ValueError):
+        expert_ffn(xe, wg, wu, wd, expert_ids=eids, interpret=True)
+
+
+@pytest.mark.parametrize("variant", ["dense", "ragged", "grouped"])
+def test_expert_ffn_kernel_path_is_differentiable(variant):
+    """pallas_call has no autodiff rule, so the op wraps the kernel in a
+    custom VJP (kernel forward, oracle backward) — grads through the TPU
+    paths (single-device dense, EP receive buckets) must match the
+    oracle's grads exactly (train_step runs through both)."""
+    from repro.kernels.expert_ffn.ops import expert_ffn_op
+    E, C, d, f = 3, 16, 8, 24
+    xe = jnp.asarray(RNG.standard_normal((E, C, d)), jnp.float32)
+    wg = jnp.asarray(RNG.standard_normal((E, d, f)) * 0.1, jnp.float32)
+    wu = jnp.asarray(RNG.standard_normal((E, d, f)) * 0.1, jnp.float32)
+    wd = jnp.asarray(RNG.standard_normal((E, f, d)) * 0.1, jnp.float32)
+    cnt = None if variant == "dense" else jnp.asarray([16, 0, 5], jnp.int32)
+    eids = (jnp.asarray([0, 1, 1], jnp.int32) if variant == "grouped"
+            else None)
+
+    def loss(kernel):
+        def f_(xe, wg, wu, wd):
+            y = expert_ffn_op(xe, wg, wu, wd, counts=cnt, expert_ids=eids,
+                              force_kernel=kernel, interpret=True)
+            return jnp.sum(y.astype(jnp.float32) ** 2)
+        return f_
+
+    gk = jax.grad(loss(True), argnums=(0, 1, 2, 3))(xe, wg, wu, wd)
+    go = jax.grad(loss(False), argnums=(0, 1, 2, 3))(xe, wg, wu, wd)
+    for k, o in zip(gk, go):
+        np.testing.assert_allclose(np.asarray(k), np.asarray(o),
+                                   rtol=1e-5, atol=1e-6)
+
+
 def test_ragged_ref_masks_garbage_rows():
     """The dispatch zero-fills unused bucket rows; the ragged oracle (and
     kernel) must not depend on that — garbage tails stay contained."""
