@@ -37,6 +37,48 @@ from repro.models.model import init_model
 CACHE_DIR = os.path.normpath(os.path.join(
     os.path.dirname(__file__), "..", "reports", "bench_cache"))
 
+# --------------------------------------------------------------------------
+# Suite registry (single source for benchmarks/run.py — new benchmarks
+# register here instead of editing the runner's import list)
+# --------------------------------------------------------------------------
+
+# name -> (module under benchmarks/, entry attr).  "run" entries are the
+# legacy Csv-collector suites, imported in-process; "main" entries are
+# CLI benchmarks (argparse, --smoke preset, machine-readable
+# reports/bench/*.json) which the runner executes in a SUBPROCESS — they
+# may need their own XLA environment (ep_exchange forces an 8-device host
+# platform, which cannot be changed once jax is initialised in-process).
+SUITE_SPECS = {
+    "speed": ("speed_vs_frameworks", "run"),        # Figs 12, 13
+    "prefetch_acc": ("prefetch_accuracy", "run"),   # Table 2, Fig 16b
+    "cache": ("cache_hitrate", "run"),              # Figs 7, 17b, 18d
+    "assignment": ("assignment_quality", "run"),    # Figs 14, 15, 20; Tab 4
+    "prefetch_speed": ("prefetch_speed", "run"),    # Fig 16a
+    "sensitivity": ("sensitivity", "run"),          # Fig 18a-c, Table 9
+    "breakdown": ("breakdown", "run"),              # Figs 19, 5
+    "cosine": ("cosine_similarity", "run"),         # Table 8, App A.5
+    "roofline": ("roofline", "run"),                # deliverable (g)
+    "moe_dispatch": ("moe_dispatch", "main"),       # DESIGN.md §4
+    "ep_exchange": ("ep_exchange", "main"),         # DESIGN.md §6
+    "serving": ("serving_throughput", "main"),      # DESIGN.md §3
+    "policy_ablation": ("policy_ablation", "main"),  # DESIGN.md §7
+}
+
+
+def load_suite(name: str):
+    """Resolve a registered suite to a ``fn(csv)`` callable."""
+    import importlib
+    import subprocess
+    import sys
+    mod_name, attr = SUITE_SPECS[name]
+    if attr == "main":
+        def run_cli(csv, _mod=mod_name):
+            subprocess.run(
+                [sys.executable, "-m", f"benchmarks.{_mod}", "--smoke"],
+                check=True)
+        return run_cli
+    return getattr(importlib.import_module(f"benchmarks.{mod_name}"), attr)
+
 # the paper's evaluation models (Table 3), reduced same-family
 BENCH_MODELS = ["mixtral-8x7b", "deepseek-v2-lite-16b", "qwen3-30b-a3b"]
 SHORT = {"mixtral-8x7b": "Mixtral", "deepseek-v2-lite-16b": "DeepSeek",
@@ -88,13 +130,21 @@ class BenchModel:
 _MODELS: Dict[str, BenchModel] = {}
 
 
-def load_model(arch: str, train_steps: int = 150, seed: int = 0) -> BenchModel:
-    if arch in _MODELS:
-        return _MODELS[arch]
+def load_model(arch: str, train_steps: int = 150, seed: int = 0,
+               cfg_transform=None, tag: str = "") -> BenchModel:
+    """``cfg_transform``/``tag`` build a named variant of the bench model
+    (e.g. policy_ablation widens the expert count so cache policies are
+    compared in the paper's E >> cache_size regime) — trained and cached
+    separately under ``{arch}{tag}.ckpt``."""
+    key = arch + tag
+    if key in _MODELS:
+        return _MODELS[key]
     cfg = bench_cfg(arch)
+    if cfg_transform is not None:
+        cfg = cfg_transform(cfg)
     corpus = MarkovCorpus(vocab=cfg.vocab, seed=seed)
     os.makedirs(CACHE_DIR, exist_ok=True)
-    ck = os.path.join(CACHE_DIR, f"{arch}.ckpt")
+    ck = os.path.join(CACHE_DIR, f"{key}.ckpt")
     template = init_model(jax.random.PRNGKey(seed), cfg)
     if os.path.exists(ck):
         params = jax.tree.map(jnp.asarray, restore(ck, template))
@@ -116,7 +166,7 @@ def load_model(arch: str, train_steps: int = 150, seed: int = 0) -> BenchModel:
     bm = BenchModel(arch=arch, cfg=cfg, params=params, corpus=corpus,
                     res_vecs=res_vecs, gate_ws=gate_weights(params, cfg),
                     cost=CostModel.for_config(get_config(arch), LOCAL_PC))
-    _MODELS[arch] = bm
+    _MODELS[key] = bm
     return bm
 
 

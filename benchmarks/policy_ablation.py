@@ -1,0 +1,183 @@
+"""Policy ablation: every registered OffloadPolicy through BOTH halves of
+the unified API (DESIGN.md §7) on the same mixtral smoke model.
+
+For each policy name ("dali", "static", "all_gpu", "lru", "statistical",
+"random", "none"):
+
+  * **modeled** — ``core.simulator.simulate_policy`` replays ONE shared
+    routing trace (captured from the briefly-trained model's real decode)
+    through the policy's NumPy mirror: decode tok/s + makespan estimate
+    under the paper's local-PC timing model (DESIGN.md §2), cache hit
+    rate and prefetch accuracy are measured on the real routing.
+  * **executed** — the jitted serving decode step is built with that
+    policy (``make_decode_step(policy=...)``) and timed on device:
+    wall µs/step (the policy's in-graph overhead on this host) and the
+    hit rate drained from the device-side accumulator.
+
+The modeled decode tok/s is the paper-semantics headline (actual expert
+compute never leaves the accelerator in this container); DALI is expected
+best-or-tied there.  Defaults pick the paper's regime deliberately: B=1
+single-user decode (each correct residual prefetch removes one expert
+transfer from the critical path) and an E=16 model variant so the cache
+working set exceeds capacity — at the smoke config's E=4 every expert is
+in every step's working set and cache policies are indistinguishable.
+Writes reports/bench/BENCH_policy_ablation.json and prints the same
+markdown table report_md.py renders.
+
+  PYTHONPATH=src python -m benchmarks.policy_ablation --smoke   # CI tier-2
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import load_model, time_fn
+from repro.core.policy import DaliConfig, make_policy, policy_names
+from repro.core.simulator import simulate_policy
+from repro.serving.steps import init_serve_state, make_decode_step
+
+BENCH_DIR = os.path.normpath(os.path.join(
+    os.path.dirname(__file__), "..", "reports", "bench"))
+
+
+def run_policy(name: str, bm, dcfg, trace, batch: int, ctx_len: int,
+               exec_steps: int, reps: int):
+    import jax.numpy as jnp
+    from repro.core.policy import StaticAssign
+    cfg = bm.cfg
+    sub = {}
+    if name == "static":
+        # Fiddler-style absolute threshold scaled to the workload: the
+        # registry default (2.0, the simulator's B>=4 setting) would send
+        # EVERYTHING to CPU at B=1, where per-expert loads are binary
+        # (top-k picks are distinct experts).  B*K/4 recovers the default
+        # at B=8 and degenerates to "every activated expert -> GPU" at
+        # B=1 — absolute thresholds cannot split a single-user decode
+        # step, which is exactly the paper's case for workload-AWARE
+        # assignment; the row stays an honest Fiddler stand-in at any B
+        sub["assignment"] = StaticAssign(
+            threshold=max(0.5, batch * cfg.moe.top_k / 4.0))
+    pol = make_policy(name, dcfg if name != "none" else None,
+                      top_k=cfg.moe.top_k, router_type=cfg.moe.router_type,
+                      **sub)
+    sim = simulate_policy(trace, cfg, bm.cost, pol, dcfg=dcfg,
+                          gate_ws=bm.gate_ws, res_vecs=bm.res_vecs,
+                          batch=batch, ctx_len=ctx_len)
+    res_vecs = jnp.asarray(np.stack(bm.res_vecs))
+    decode = jax.jit(make_decode_step(cfg, policy=pol))
+    state = init_serve_state(cfg, batch, ctx_len + exec_steps + 2,
+                             policy=pol)
+    wall_us = time_fn(decode, bm.params, state, res_vecs,
+                      reps=reps, warmup=2)
+    exec_hit = None
+    if pol.schedules:
+        st = state
+        for _ in range(exec_steps):
+            st, _, _ = decode(bm.params, st, res_vecs)
+        acc = jax.device_get(st["dali"]["acc"])
+        lookups = int(acc["hits"]) + int(acc["misses"])
+        exec_hit = int(acc["hits"]) / lookups if lookups else 0.0
+    return {
+        "policy": name,
+        "decode_tok_s": round(sim.tokens_per_s, 3),
+        "hit_rate": round(sim.cache_hit_rate, 4),
+        "makespan_est_s": round(sim.moe_time_s + sim.attn_time_s, 6),
+        "prefetch_acc": round(sim.prefetch_acc, 4),
+        "link_s": round(sim.pcie_time_s, 6),
+        "step_wall_us": round(wall_us, 1),
+        "exec_hit_rate": (round(exec_hit, 4)
+                          if exec_hit is not None else None),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--experts", type=int, default=16,
+                    help="routed experts in the bench variant; the smoke "
+                         "config's 4 puts every expert in every step's "
+                         "working set, which makes cache policies "
+                         "indistinguishable — the paper's regime is "
+                         "E >> cache_size")
+    ap.add_argument("--batch", type=int, default=1,
+                    help="decode batch; 1 is the paper's local-PC "
+                         "single-user setting, where per-token residual "
+                         "prediction is pivotal (each correct prefetch "
+                         "removes a whole expert transfer from the step)")
+    ap.add_argument("--steps", type=int, default=32,
+                    help="trace length (decode steps replayed per policy)")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--cache-ratio", type=float, default=0.5)
+    ap.add_argument("--prefetch-size", type=int, default=2,
+                    help="experts transferred ahead per layer (paper §4.2)")
+    ap.add_argument("--reps", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced trace + calibration training for CI "
+                         "tier-2 (recorded in the JSON so a smoke row is "
+                         "never diffed against a full run)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.steps = min(args.steps, 10)
+    reps = args.reps or (5 if args.smoke else 20)
+    exec_steps = 8 if args.smoke else 24
+
+    import dataclasses
+
+    def widen(cfg):
+        return cfg.replace(moe=dataclasses.replace(
+            cfg.moe, n_routed=args.experts))
+
+    bm = load_model(args.arch, train_steps=60 if args.smoke else 150,
+                    seed=args.seed, cfg_transform=widen,
+                    tag=f"-e{args.experts}")
+    # cost constants baked from the FULL-size paper model (bm.cost, the
+    # calibrated local-PC profile — benchmarks/common.py convention:
+    # timing is modeled at paper scale, routing is measured on the smoke
+    # model); geometry from the bench variant's expert count
+    trace = bm.decode_trace(args.batch, args.steps,
+                            prompt_len=args.prompt_len, seed=args.seed)
+    E = bm.cfg.moe.n_routed
+    dcfg = DaliConfig.from_cost_model(
+        bm.cost, n_moe_layers=trace.n_moe_layers, n_experts=E,
+        cache_size=max(1, int(E * args.cache_ratio)),
+        prefetch_size=args.prefetch_size)
+
+    rows = []
+    for name in policy_names():
+        print(f"== policy {name}")
+        rows.append(run_policy(name, bm, dcfg, trace, args.batch,
+                               args.prompt_len, exec_steps, reps))
+
+    from benchmarks.report_md import policy_ablation_table
+    print()
+    for line in policy_ablation_table(rows):
+        print(line)
+    by_name = {r["policy"]: r for r in rows}
+    best = max(rows, key=lambda r: r["decode_tok_s"])
+    dali = by_name["dali"]
+    tied = dali["decode_tok_s"] >= best["decode_tok_s"] * (1 - 1e-6)
+    print(f"\nDALI modeled decode tok/s {'best-or-tied' if tied else 'NOT best'}"
+          f" ({dali['decode_tok_s']:.2f} vs max {best['decode_tok_s']:.2f}"
+          f" [{best['policy']}])")
+
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    out = os.path.join(BENCH_DIR, "BENCH_policy_ablation.json")
+    with open(out, "w") as f:
+        json.dump({"arch": args.arch, "backend": jax.default_backend(),
+                   "smoke": bool(args.smoke),
+                   "workload": {"batch": args.batch, "steps": args.steps,
+                                "prompt_len": args.prompt_len,
+                                "cache_ratio": args.cache_ratio},
+                   "dali_best_or_tied": bool(tied),
+                   "rows": rows}, f, indent=2)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,46 +1,40 @@
-"""Benchmark harness: one module per paper table/figure.  Prints
-``name,us_per_call,derived`` CSV rows (us_per_call = simulated/measured
-step time where meaningful, 0.0 for pure-ratio metrics).
+"""Benchmark harness: one module per paper table/figure, plus the
+CLI-style system benchmarks (moe_dispatch, ep_exchange, serving,
+policy_ablation — run at their --smoke preset, each writing its
+machine-readable reports/bench/*.json).  The suite list lives in
+``benchmarks.common.SUITE_SPECS`` — new benchmarks register there, not
+here.  Legacy suites print ``name,us_per_call,derived`` CSV rows
+(us_per_call = simulated/measured step time where meaningful, 0.0 for
+pure-ratio metrics).
 
-  PYTHONPATH=src python -m benchmarks.run [--only speed,prefetch,...]
+  PYTHONPATH=src python -m benchmarks.run [--only speed,policy_ablation,...]
 """
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
-from benchmarks import (assignment_quality, breakdown, cache_hitrate,
-                        cosine_similarity, prefetch_accuracy, prefetch_speed,
-                        roofline, sensitivity, speed_vs_frameworks)
-from benchmarks.common import Csv
-
-SUITES = {
-    "speed": speed_vs_frameworks.run,         # Figs 12, 13
-    "prefetch_acc": prefetch_accuracy.run,    # Table 2, Fig 16b
-    "cache": cache_hitrate.run,               # Figs 7, 17b, 18d
-    "assignment": assignment_quality.run,     # Figs 14, 15, 20; Table 4
-    "prefetch_speed": prefetch_speed.run,     # Fig 16a
-    "sensitivity": sensitivity.run,           # Fig 18a-c, Table 9
-    "breakdown": breakdown.run,               # Figs 19, 5
-    "cosine": cosine_similarity.run,          # Table 8, App A.5
-    "roofline": roofline.run,                 # deliverable (g)
-}
+from benchmarks.common import Csv, SUITE_SPECS, load_suite
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma-separated suite names")
+                    help="comma-separated suite names "
+                         f"(registered: {','.join(SUITE_SPECS)})")
     args = ap.parse_args()
-    picks = args.only.split(",") if args.only else list(SUITES)
+    picks = args.only.split(",") if args.only else list(SUITE_SPECS)
+    unknown = [p for p in picks if p not in SUITE_SPECS]
+    if unknown:
+        raise SystemExit(f"unknown suites {unknown}; "
+                         f"registered: {sorted(SUITE_SPECS)}")
     csv = Csv()
     print("name,us_per_call,derived")
     t0 = time.time()
     for name in picks:
         print(f"# === {name} ===", flush=True)
         t1 = time.time()
-        SUITES[name](csv)
+        load_suite(name)(csv)
         print(f"# {name} done in {time.time()-t1:.0f}s", flush=True)
     print(f"# all suites done in {time.time()-t0:.0f}s "
           f"({len(csv.rows)} rows)")

@@ -59,6 +59,24 @@ def main():
         print(f"{spec.name:26s} {r.tokens_per_s:8.2f} "
               f"{r.tokens_per_s/base:7.2f}x {100*r.cache_hit_rate:5.1f}")
 
+    # the same comparison through the unified OffloadPolicy registry —
+    # these are the IDENTICAL policy definitions the jitted serving path
+    # runs (launch/serve.py --policy ...), replayed via their NumPy
+    # mirrors (core/policy.py, DESIGN.md §7)
+    from repro.core.policy import DaliConfig
+    from repro.core.simulator import simulate_policy
+    # cost constants from the FULL-size paper model (same cm as the table
+    # above), not the smoke dims — geometry matches the +Workload row
+    dcfg = DaliConfig.from_cost_model(
+        cm, n_moe_layers=trace.n_moe_layers, n_experts=E,
+        cache_size=E // 4, prefetch_size=1, w_size=4, u_size=1)
+    print(f"\n{'--policy':26s} {'tok/s':>8s} {'hit%':>6s}")
+    for name in ("none", "all_gpu", "static", "lru", "dali"):
+        r = simulate_policy(trace, cfg, cm, name, dcfg=dcfg, gate_ws=gws,
+                            res_vecs=res, batch=8, ctx_len=32)
+        print(f"{name:26s} {r.tokens_per_s:8.2f} "
+              f"{100*r.cache_hit_rate:5.1f}")
+
 
 if __name__ == "__main__":
     main()

@@ -1,21 +1,23 @@
 """In-graph DALI engine: the paper's Fig. 9 control loop as pure JAX.
 
 Per serve step, after the model forward has produced per-MoE-layer routing
-observables (workloads, gate inputs — see ``apply_model(trace=True)``), this
-module runs, entirely under jit:
+observables (workloads, gate inputs — see ``apply_model(trace=True)``),
+the serving stack runs an :class:`repro.core.policy.OffloadPolicy` under
+jit.  The paper's composition — Greedy Assignment (Alg. 1) + Residual
+Prefetch (Eq. 10) + Workload-Aware Cache (Alg. 2) — is the registered
+``"dali"`` policy; this module keeps the historical entry points as thin
+compat wrappers over ``core/policy.py`` (DESIGN.md §7):
 
-  1. Greedy Assignment (Alg. 1) per layer — lax.scan over the sorted
-     |t_gpu - t_cpu| order (vmapped over layers),
-  2. Residual-Based Prefetching (Eq. 10) — layer l's gate applied to layer
-     l-1's residual-corrected features,
-  3. Workload-Aware Cache Replacement (Alg. 2) — windowed score
-     accumulation with u_size swaps, as functional state updates.
+  * ``dali_schedule``    — one step of the "dali" policy on the legacy
+    flat state layout ({resident, scores, tick, acc})
+  * ``init_dali_state``  — the legacy flat state
+  * ``predict_next_workload`` / ``DaliConfig`` — re-exports
 
-The *decisions* are bit-exact with the host/numpy implementations (tested);
+The *decisions* are bit-exact with the pre-refactor monolith (fixture-
+tested in tests/test_policy.py) and with the host/numpy implementations;
 device-side numerics are unchanged (all activated experts compute on the
 accelerator in this container — the CPU tier exists in the timing model,
-see DESIGN.md §2).  Outputs include per-layer T_cpu/T_gpu estimates, link
-bytes and cache hits so the serve loop can report scheduling telemetry.
+see DESIGN.md §2).
 """
 from __future__ import annotations
 
@@ -24,215 +26,73 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 
-from repro.core.assignment import greedy_assign_jnp
-from repro.core.cost_model import CostModel
-
-
-@dataclass(frozen=True)
-class DaliConfig:
-    n_moe_layers: int
-    n_experts: int
-    cache_size: int
-    prefetch_size: int = 1
-    w_size: int = 4
-    u_size: int = 1
-    # cost constants (seconds), baked from a CostModel
-    t_trans: float = 0.01
-    cpu_alpha: float = 30e-6
-    cpu_per_tok: float = 1e-4        # FLOP-bound slope
-    cpu_mem: float = 5e-3            # DRAM weight-read floor
-    gpu_alpha: float = 15e-6
-    gpu_per_tok: float = 1e-6
-    gpu_mem: float = 4e-4            # HBM weight-read floor
-
-    @classmethod
-    def from_cost_model(cls, cm: CostModel, n_moe_layers: int,
-                        n_experts: int, cache_size: int, **kw):
-        p = cm.profile
-        flops_tok = 6.0 * cm.d_model * cm.d_expert
-        return cls(
-            n_moe_layers=n_moe_layers, n_experts=n_experts,
-            cache_size=cache_size,
-            t_trans=cm.trans_time,
-            cpu_alpha=p.cpu_overhead_s,
-            cpu_per_tok=flops_tok / (p.cpu_gflops * 1e9),
-            cpu_mem=cm.expert_bytes / (p.cpu_dram_gbps * 1e9),
-            gpu_alpha=p.gpu_overhead_s,
-            gpu_per_tok=flops_tok / (p.gpu_gflops * 1e9),
-            gpu_mem=cm.expert_bytes / (p.gpu_hbm_gbps * 1e9),
-            **kw)
+from repro.core.policy import (DaliConfig, Observation,  # noqa: F401
+                               _init_acc, _random_resident, make_policy,
+                               predict_next_workload)
 
 
 def init_dali_state(dcfg: DaliConfig, key=None):
-    """resident: (L, E) bool — paper: cache seeded with random experts.
+    """Legacy flat DALI state: {resident, scores, tick, acc}.
 
+    ``resident``: (L, E) bool — paper: cache seeded with random experts.
     ``acc`` is the device-side telemetry accumulator: cumulative sums of
-    the per-step scheduling telemetry, folded in-graph by
-    ``dali_schedule`` so the serve loop never has to sync per step —
-    ``TelemetryAggregator`` drains it once per flush interval.  Counters
-    are int32 (exact); the time sums are float32 running totals of
-    *modeled* time estimates (DESIGN.md §2), whose rounding drift only
-    becomes material past ~1e6 uninterrupted steps per state lineage."""
-    L, E, C = dcfg.n_moe_layers, dcfg.n_experts, dcfg.cache_size
+    the per-step scheduling telemetry, folded in-graph by the policy step
+    so the serve loop never has to sync per step — ``TelemetryAggregator``
+    drains it once per flush interval.  Counters are int32 (exact); the
+    time sums are float32 running totals of *modeled* time estimates
+    (DESIGN.md §2), whose rounding drift only becomes material past ~1e6
+    uninterrupted steps per state lineage.
+
+    New code should prefer ``make_policy(...).init()`` (the uniform
+    policy-state layout the serving stack uses); this layout survives for
+    the compat wrapper below and direct engine tests."""
+    L, E = dcfg.n_moe_layers, dcfg.n_experts
     if key is None:
         key = jax.random.PRNGKey(0)
-    order = jax.vmap(lambda k: jax.random.permutation(k, E))(
-        jax.random.split(key, L))
-    resident = order < C          # C random residents per layer
     return {
-        "resident": resident,
+        "resident": _random_resident(dcfg, key),
         "scores": jnp.zeros((L, E), jnp.float32),
         "tick": jnp.zeros((), jnp.int32),
-        "acc": {
-            "steps": jnp.zeros((), jnp.int32),
-            "moe_time": jnp.zeros((), jnp.float32),
-            "link_time": jnp.zeros((), jnp.float32),
-            "hits": jnp.zeros((), jnp.int32),
-            "misses": jnp.zeros((), jnp.int32),
-            "swaps": jnp.zeros((), jnp.int32),
-        },
+        "acc": _init_acc(),
     }
-
-
-def _t_cpu(w, dcfg: DaliConfig):
-    t = dcfg.cpu_alpha + jnp.maximum(w * dcfg.cpu_per_tok, dcfg.cpu_mem)
-    return jnp.where(w > 0, t, 0.0)
-
-
-def _t_gpu(w, resident, dcfg: DaliConfig):
-    comp = dcfg.gpu_alpha + jnp.maximum(w * dcfg.gpu_per_tok, dcfg.gpu_mem)
-    trans = jnp.where(resident, 0.0, dcfg.t_trans)
-    return jnp.where(w > 0, jnp.maximum(trans, comp), 0.0)
-
-
-def predict_next_workload(gate_in_prev, res_vec_prev, router, top_k: int,
-                          router_type: str = "softmax_topk",
-                          token_mask=None):
-    """Eq. 10: workload prediction for THIS layer from the PREVIOUS layer's
-    residual-corrected gate input.  gate_in_prev (T,d), router (d,E).
-
-    ``token_mask`` (T,) bool drops tokens from retired/empty slots so a
-    partially-occupied continuous batch predicts only real traffic."""
-    h = gate_in_prev.astype(jnp.float32) + res_vec_prev[None, :]
-    logits = h @ router
-    if router_type == "sigmoid":
-        scores = jax.nn.sigmoid(logits)
-    else:
-        scores = jax.nn.softmax(logits, axis=-1)
-    _, idx = jax.lax.top_k(scores, top_k)
-    E = router.shape[1]
-    oh = jax.nn.one_hot(idx, E, dtype=jnp.int32)              # (T, k, E)
-    if token_mask is not None:
-        oh = oh * token_mask.astype(jnp.int32)[:, None, None]
-    return jnp.sum(oh, axis=(0, 1))
-
-
-def _cache_update(resident, scores, w, do_update, dcfg: DaliConfig):
-    """Alg. 2 for one layer: windowed swap of u_size experts (functional)."""
-    scores = scores + w.astype(jnp.float32)
-    NEG, POS = -1e30, 1e30
-    non_res_scores = jnp.where(resident, NEG, scores)
-    res_scores = jnp.where(resident, scores, POS)
-    inc_val, inc_idx = jax.lax.top_k(non_res_scores, dcfg.u_size)
-    out_val, out_idx = jax.lax.top_k(-res_scores, dcfg.u_size)
-    out_val = -out_val
-    # pair highest incoming with lowest outgoing; swap only on improvement
-    swap = (inc_val > out_val) & (inc_val > NEG / 2) & (out_val < POS / 2)
-    new_resident = resident
-    new_resident = new_resident.at[out_idx].set(
-        jnp.where(swap, False, new_resident[out_idx]))
-    new_resident = new_resident.at[inc_idx].set(
-        jnp.where(swap, True, new_resident[inc_idx]))
-    n_swaps = jnp.sum(swap.astype(jnp.int32))
-    resident = jnp.where(do_update, new_resident, resident)
-    scores = jnp.where(do_update, jnp.zeros_like(scores), scores)
-    n_swaps = jnp.where(do_update, n_swaps, 0)
-    return resident, scores, n_swaps
 
 
 def dali_schedule(state, workloads, gate_in, routers, res_vecs,
                   dcfg: DaliConfig, top_k: int,
                   router_type: str = "softmax_topk", token_mask=None):
-    """One serve step of DALI scheduling, fully jittable.
+    """One serve step of DALI scheduling, fully jittable (compat wrapper
+    over the registered "dali" policy).
 
     workloads (L, E) int32; gate_in (L, T, d); routers (L, d, E);
     res_vecs (L, d) — res_vecs[l] corrects layer l's gate input to predict
     layer l+1 (Eq. 11).  ``token_mask`` (T,) bool restricts prefetch
     prediction to live tokens (continuous batching: T = batch slots, only
     some occupied; the caller is expected to pass workloads already masked
-    the same way).  Returns (new_state, telemetry dict).
+    the same way).  Returns (new_state, telemetry dict) on the legacy flat
+    state layout accepted/produced by ``init_dali_state``.
     """
-    L, E = workloads.shape
-    w = workloads.astype(jnp.float32)
-
-    # --- Residual-Based Prefetching: predictions for layers 1..L-1 --------
-    # vmapped over layers so trace size / compile time stay O(1) in L
-    # (layer l's router applied to layer l-1's corrected gate input)
-    if L > 1:
-        pf_rest = jax.vmap(
-            lambda gi, rv, rt: predict_next_workload(
-                gi, rv, rt, top_k, router_type, token_mask=token_mask)
-        )(gate_in[:-1], res_vecs[:-1], routers[1:])           # (L-1, E)
-        pf_pred = jnp.concatenate(
-            [jnp.zeros((1, E), pf_rest.dtype), pf_rest])      # (L, E)
-    else:
-        pf_pred = jnp.zeros((L, E), jnp.int32)
-    pf_rank = jnp.argsort(-pf_pred, axis=-1)
-    prefetched = jnp.zeros((L, E), bool)
-    cols = pf_rank[:, :dcfg.prefetch_size]
-    prefetched = prefetched.at[jnp.arange(L)[:, None], cols].set(True)
-    prefetched = prefetched.at[0].set(False)      # layer 0: nothing upstream
-
-    # --- Greedy Assignment (Alg. 1), vmapped over layers ------------------
-    resident_eff = state["resident"] | prefetched
-    tc = _t_cpu(w, dcfg)                                       # (L, E)
-    tg = _t_gpu(w, resident_eff, dcfg)
-    on_cpu, on_gpu, T_cpu, T_gpu = jax.vmap(greedy_assign_jnp)(tc, tg)
-
-    # --- Workload-Aware Cache Replacement (Alg. 2) ------------------------
-    tick = state["tick"] + 1
-    do_update = (tick % dcfg.w_size) == 0
-    resident_new, scores_new, n_swaps = jax.vmap(
-        lambda r, s, wl: _cache_update(r, s, wl, do_update, dcfg)
-    )(state["resident"], state["scores"], w)
-
-    new_state = {"resident": resident_new, "scores": scores_new,
-                 "tick": tick}
-    gpu_active = on_gpu & (workloads > 0)
-    hits = jnp.sum(gpu_active & resident_eff, axis=-1)
-    misses = jnp.sum(gpu_active & ~resident_eff, axis=-1)
-    link_s = (misses.astype(jnp.float32) * dcfg.t_trans
-              + n_swaps.astype(jnp.float32) * dcfg.t_trans
-              + jnp.sum(prefetched, -1).astype(jnp.float32) * dcfg.t_trans)
-    step_moe_time = jnp.sum(jnp.maximum(T_cpu, T_gpu))
-    telemetry = {
-        "on_gpu": on_gpu, "on_cpu": on_cpu,
-        "T_cpu": T_cpu, "T_gpu": T_gpu,
-        "layer_time": jnp.maximum(T_cpu, T_gpu),
-        "hits": hits, "misses": misses, "swaps": n_swaps,
-        "prefetched": prefetched, "pf_pred": pf_pred,
-        "link_seconds": link_s,
-        "step_moe_time": step_moe_time,
-    }
-    # fold cumulative sums into the device-side accumulator so serve loops
-    # can read telemetry without a per-step host sync (DESIGN.md §4)
-    acc = state.get("acc")
-    if acc is not None:
-        new_state["acc"] = {
-            "steps": acc["steps"] + 1,
-            "moe_time": acc["moe_time"] + step_moe_time,
-            "link_time": acc["link_time"] + jnp.sum(link_s),
-            "hits": acc["hits"] + jnp.sum(hits).astype(jnp.int32),
-            "misses": acc["misses"] + jnp.sum(misses).astype(jnp.int32),
-            "swaps": acc["swaps"] + jnp.sum(n_swaps).astype(jnp.int32),
-        }
-    return new_state, telemetry
+    pol = make_policy("dali", dcfg, top_k=top_k, router_type=router_type)
+    pstate = {"resident": state["resident"],
+              "cache": {"scores": state["scores"]},
+              "prefetch": {},
+              "tick": state["tick"]}
+    if "acc" in state:
+        pstate["acc"] = state["acc"]
+    obs = Observation(gate_in=gate_in, routers=routers, res_vecs=res_vecs,
+                      token_mask=token_mask)
+    new, decisions = pol.step(pstate, workloads, obs)
+    out = {"resident": new["resident"],
+           "scores": new["cache"]["scores"],
+           "tick": new["tick"]}
+    if "acc" in new:
+        out["acc"] = new["acc"]
+    return out, decisions.tel
 
 
 def masked_workloads(topk_idx, n_experts: int, token_mask):
     """Per-expert token counts from per-token routing choices, restricted
     to live slots.  topk_idx (L, T, K) int32, token_mask (T,) bool ->
-    (L, E) int32.  This is what makes DALI's scheduling see the *actual*
+    (L, E) int32.  This is what makes the scheduler see the *actual*
     per-step token mix under continuous batching instead of counting
     garbage tokens decoded in retired/empty slots."""
     oh = jax.nn.one_hot(topk_idx, n_experts, dtype=jnp.int32)  # (L,T,K,E)
@@ -242,17 +102,22 @@ def masked_workloads(topk_idx, n_experts: int, token_mask):
 
 @dataclass
 class TelemetryAggregator:
-    """Host-side view of DALI telemetry across a serve run whose batch
-    composition changes every step (continuous batching).
+    """Host-side view of offload-policy telemetry across a serve run whose
+    batch composition changes every step (continuous batching).
+
+    Policy-agnostic: every registered policy folds the same accumulator
+    structure (``policy._init_acc``) into its state and emits the same
+    ``tel`` keys, so this aggregator works unchanged whichever ``--policy``
+    is plugged in (the NullPolicy has no accumulator and is a no-op here).
 
     Sync-free path (what the servers use): ``observe`` once per decode
     step records the host-known counters (steps, live tokens) and keeps a
     handle to the device-side cumulative accumulator
-    (``dali_state["acc"]``) — no device→host transfer.  Every
+    (``policy_state["acc"]``) — no device→host transfer.  Every
     ``flush_interval`` observed steps (and at ``flush``/``end_epoch``)
     the accumulator is drained with ONE transfer and the deltas land in
     the host totals.  ``end_epoch`` additionally re-bases the drain for a
-    fresh dali state (the wave server re-inits state per wave).
+    fresh policy state (the wave server re-inits state per wave).
 
     ``update`` is the legacy per-step host-sync path over a telemetry
     dict; it remains for direct telemetry tests but should not be mixed
@@ -269,10 +134,10 @@ class TelemetryAggregator:
     _prev: dict = field(default_factory=dict, repr=False)
     _since_flush: int = field(default=0, repr=False)
 
-    def observe(self, dali_state, n_active=None):
+    def observe(self, policy_state, n_active=None):
         """Per decode step, sync-free: stash the device accumulator and
-        bump host-side counters.  No-op when DALI is off."""
-        acc = dali_state.get("acc") if dali_state else None
+        bump host-side counters.  No-op when scheduling is off."""
+        acc = policy_state.get("acc") if policy_state else None
         if acc is None:
             return
         self.steps += 1
@@ -301,7 +166,7 @@ class TelemetryAggregator:
         self._since_flush = 0
 
     def end_epoch(self):
-        """Flush and re-base: the next observed dali state starts its
+        """Flush and re-base: the next observed policy state starts its
         accumulator from zero (wave boundary / retirement of a run)."""
         self.flush()
         self._prev = {}
@@ -327,7 +192,7 @@ class TelemetryAggregator:
 
     def summary(self) -> str:
         # occupancy is the server's to report (ServeMetrics.mean_occupancy
-        # — it also covers DALI-off steps this aggregator never sees)
+        # — it also covers policy-off steps this aggregator never sees)
         if not self.steps:
             return ""
         return (f"DALI est: moe={self.moe_time_est:.3f}s "

@@ -1,0 +1,891 @@
+"""Pluggable, jit-compatible offloading policies (the OffloadPolicy API).
+
+The paper's three mechanisms — Greedy Assignment (Alg. 1), Residual-Based
+Prefetching (Eq. 10-11) and Workload-Aware Cache Replacement (Alg. 2) —
+are one *composition* in a policy space.  This module makes the space
+explicit so the simulator and the jitted serving engine consume the SAME
+policy definitions (DESIGN.md §7):
+
+  OffloadPolicy
+    init(key) -> state            state is a pytree (stable across steps)
+    step(state, workloads, obs) -> (state', Decisions)
+
+where ``obs`` is an :class:`Observation` of routing observables from the
+current forward and ``Decisions`` carries ``(assign_mask, prefetch_set,
+resident, tel)``.  A policy is composed from three swappable sub-policies:
+
+  * :class:`AssignmentPolicy`  — expert -> device (GPU/CPU) per layer
+  * :class:`PrefetchPolicy`    — predict next-layer workloads, pick the
+                                 ``prefetch_size`` experts to move early
+  * :class:`CachePolicy`       — which experts stay device-resident
+
+Every sub-policy has BOTH a JAX implementation (pure functions over the
+state pytree, used under jit by ``serving/steps.py``) and a NumPy mirror
+(``*_np``, used by ``core/simulator.py`` replay) — the two are
+parity-tested against each other on identical routing traces
+(tests/test_policy.py).
+
+String registry (``make_policy``): "dali", "static", "all_gpu", "lru",
+"statistical", "random", "none".  "dali" reproduces the pre-refactor
+``engine.dali_schedule`` bit-exactly (fixture-tested); ``dali_schedule``
+itself survives as a thin compat wrapper over this module.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.assignment import greedy_assign_jnp
+from repro.core.cost_model import CostModel
+
+
+# --------------------------------------------------------------------------
+# Config (cost constants shared by every policy)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DaliConfig:
+    """Scheduling geometry + cost constants, baked from a CostModel.
+
+    Shared by every registered policy (the name is historical — it
+    predates the policy registry and is re-exported by ``core.engine``)."""
+    n_moe_layers: int
+    n_experts: int
+    cache_size: int
+    prefetch_size: int = 1
+    w_size: int = 4
+    u_size: int = 1
+    # cost constants (seconds), baked from a CostModel
+    t_trans: float = 0.01
+    cpu_alpha: float = 30e-6
+    cpu_per_tok: float = 1e-4        # FLOP-bound slope
+    cpu_mem: float = 5e-3            # DRAM weight-read floor
+    gpu_alpha: float = 15e-6
+    gpu_per_tok: float = 1e-6
+    gpu_mem: float = 4e-4            # HBM weight-read floor
+
+    @classmethod
+    def from_cost_model(cls, cm: CostModel, n_moe_layers: int,
+                        n_experts: int, cache_size: int, **kw):
+        p = cm.profile
+        flops_tok = 6.0 * cm.d_model * cm.d_expert
+        return cls(
+            n_moe_layers=n_moe_layers, n_experts=n_experts,
+            cache_size=cache_size,
+            t_trans=cm.trans_time,
+            cpu_alpha=p.cpu_overhead_s,
+            cpu_per_tok=flops_tok / (p.cpu_gflops * 1e9),
+            cpu_mem=cm.expert_bytes / (p.cpu_dram_gbps * 1e9),
+            gpu_alpha=p.gpu_overhead_s,
+            gpu_per_tok=flops_tok / (p.gpu_gflops * 1e9),
+            gpu_mem=cm.expert_bytes / (p.gpu_hbm_gbps * 1e9),
+            **kw)
+
+
+class Observation(NamedTuple):
+    """Routing observables one forward produces, as the policy sees them.
+
+    gate_in  (L, T, d)  gate input features per MoE layer
+    routers  (L, d, E)  router weights, layer order
+    res_vecs (L, d)     calibrated residual-correction vectors (Eq. 11)
+    token_mask (T,) bool or None — live slots under continuous batching
+    """
+    gate_in: object
+    routers: object
+    res_vecs: object
+    token_mask: object = None
+
+
+class Decisions(NamedTuple):
+    """What a policy decided this step.
+
+    assign_mask (L, E) bool — True = execute on GPU (CPU side derivable
+    via ``tel["on_cpu"]``); prefetch_set (L, E) bool — experts transferred
+    ahead of their layer; resident (L, E) bool — the *effective* resident
+    set the step was scheduled against (cache ∪ prefetch); tel — the
+    telemetry dict ``TelemetryAggregator`` understands."""
+    assign_mask: object
+    prefetch_set: object
+    resident: object
+    tel: dict
+
+
+# --------------------------------------------------------------------------
+# Shared cost/selection primitives (JAX + NumPy mirrors)
+# --------------------------------------------------------------------------
+
+def _t_cpu(w, dcfg: DaliConfig):
+    t = dcfg.cpu_alpha + jnp.maximum(w * dcfg.cpu_per_tok, dcfg.cpu_mem)
+    return jnp.where(w > 0, t, 0.0)
+
+
+def _t_gpu(w, resident, dcfg: DaliConfig):
+    comp = dcfg.gpu_alpha + jnp.maximum(w * dcfg.gpu_per_tok, dcfg.gpu_mem)
+    trans = jnp.where(resident, 0.0, dcfg.t_trans)
+    return jnp.where(w > 0, jnp.maximum(trans, comp), 0.0)
+
+
+def _t_cpu_np(w, dcfg: DaliConfig):
+    w = w.astype(np.float32)
+    t = np.float32(dcfg.cpu_alpha) + np.maximum(
+        w * np.float32(dcfg.cpu_per_tok), np.float32(dcfg.cpu_mem))
+    return np.where(w > 0, t, np.float32(0.0)).astype(np.float32)
+
+
+def _t_gpu_np(w, resident, dcfg: DaliConfig):
+    w = w.astype(np.float32)
+    comp = np.float32(dcfg.gpu_alpha) + np.maximum(
+        w * np.float32(dcfg.gpu_per_tok), np.float32(dcfg.gpu_mem))
+    trans = np.where(resident, np.float32(0.0), np.float32(dcfg.t_trans))
+    return np.where(w > 0, np.maximum(trans, comp),
+                    np.float32(0.0)).astype(np.float32)
+
+
+def predict_next_workload(gate_in_prev, res_vec_prev, router, top_k: int,
+                          router_type: str = "softmax_topk",
+                          token_mask=None):
+    """Eq. 10: workload prediction for THIS layer from the PREVIOUS layer's
+    residual-corrected gate input.  gate_in_prev (T,d), router (d,E).
+
+    ``token_mask`` (T,) bool drops tokens from retired/empty slots so a
+    partially-occupied continuous batch predicts only real traffic."""
+    h = gate_in_prev.astype(jnp.float32) + res_vec_prev[None, :]
+    logits = h @ router
+    if router_type == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    _, idx = jax.lax.top_k(scores, top_k)
+    E = router.shape[1]
+    oh = jax.nn.one_hot(idx, E, dtype=jnp.int32)              # (T, k, E)
+    if token_mask is not None:
+        oh = oh * token_mask.astype(jnp.int32)[:, None, None]
+    return jnp.sum(oh, axis=(0, 1))
+
+
+def _predict_next_workload_np(gate_in_prev, res_vec_prev, router, top_k,
+                              router_type="softmax_topk", token_mask=None):
+    h = gate_in_prev.astype(np.float32) + res_vec_prev[None, :]
+    logits = h @ router
+    if router_type == "sigmoid":
+        scores = 1.0 / (1.0 + np.exp(-logits))
+    else:
+        x = logits - logits.max(-1, keepdims=True)
+        e = np.exp(x)
+        scores = e / e.sum(-1, keepdims=True)
+    # lax.top_k tie semantics: stable, lower index wins
+    idx = np.argsort(-scores, axis=-1, kind="stable")[:, :top_k]
+    E = router.shape[1]
+    counts = np.zeros(E, np.int32)
+    for t in range(idx.shape[0]):
+        if token_mask is not None and not token_mask[t]:
+            continue
+        for e in idx[t]:
+            counts[e] += 1
+    return counts
+
+
+def _select_prefetch(pf_pred, prefetch_size: int):
+    """Top ``prefetch_size`` predicted experts per layer; layer 0 has no
+    upstream layer to predict it, so it never prefetches."""
+    L, E = pf_pred.shape
+    pf_rank = jnp.argsort(-pf_pred, axis=-1)
+    prefetched = jnp.zeros((L, E), bool)
+    cols = pf_rank[:, :prefetch_size]
+    prefetched = prefetched.at[jnp.arange(L)[:, None], cols].set(True)
+    return prefetched.at[0].set(False)
+
+
+def _select_prefetch_np(pf_pred, prefetch_size: int):
+    L, E = pf_pred.shape
+    pf_rank = np.argsort(-pf_pred, axis=-1, kind="stable")
+    prefetched = np.zeros((L, E), bool)
+    prefetched[np.arange(L)[:, None], pf_rank[:, :prefetch_size]] = True
+    prefetched[0] = False
+    return prefetched
+
+
+def _random_resident(dcfg: DaliConfig, key):
+    """Paper §4: the cache is seeded with ``cache_size`` random residents
+    per layer (one shared definition — ``engine.init_dali_state`` and every
+    cache sub-policy's init use it)."""
+    L, E, C = dcfg.n_moe_layers, dcfg.n_experts, dcfg.cache_size
+    order = jax.vmap(lambda k: jax.random.permutation(k, E))(
+        jax.random.split(key, L))
+    return order < C
+
+
+def _init_acc():
+    """Device-side telemetry accumulator (identical across policies, so
+    ``TelemetryAggregator`` can drain any policy's state)."""
+    return {
+        "steps": jnp.zeros((), jnp.int32),
+        "moe_time": jnp.zeros((), jnp.float32),
+        "link_time": jnp.zeros((), jnp.float32),
+        "hits": jnp.zeros((), jnp.int32),
+        "misses": jnp.zeros((), jnp.int32),
+        "swaps": jnp.zeros((), jnp.int32),
+    }
+
+
+# --------------------------------------------------------------------------
+# Assignment sub-policies (expert -> device)
+# --------------------------------------------------------------------------
+
+class AssignmentPolicy:
+    """assign(w, tc, tg) over (L, E) arrays -> (on_cpu, on_gpu, T_cpu,
+    T_gpu) with per-layer (L,) makespan components."""
+    name = "base"
+
+    def assign(self, w, tc, tg):
+        raise NotImplementedError
+
+    def assign_np(self, w, tc, tg):
+        raise NotImplementedError
+
+
+class GreedyAssign(AssignmentPolicy):
+    """Algorithm 1 (the paper's method), vmapped over layers."""
+    name = "greedy"
+
+    def assign(self, w, tc, tg):
+        return jax.vmap(greedy_assign_jnp)(tc, tg)
+
+    def assign_np(self, w, tc, tg):
+        L, E = tc.shape
+        on_cpu = np.zeros((L, E), bool)
+        on_gpu = np.zeros((L, E), bool)
+        T_cpu = np.zeros(L, np.float32)
+        T_gpu = np.zeros(L, np.float32)
+        for l in range(L):
+            # float32 mirror of greedy_assign_jnp (NOT the float64 host
+            # reference in assignment.py — parity must match the jitted
+            # scan's accumulator precision decision-for-decision)
+            tcl = tc[l].astype(np.float32)
+            tgl = tg[l].astype(np.float32)
+            order = np.argsort(-np.abs(tgl - tcl), kind="stable")
+            Tc = np.float32(0.0)
+            Tg = np.float32(0.0)
+            for i in order:
+                active = (tcl[i] > 0) or (tgl[i] > 0)
+                if not active:
+                    continue
+                if np.float32(Tg + tgl[i]) <= np.float32(Tc + tcl[i]):
+                    on_gpu[l, i] = True
+                    Tg = np.float32(Tg + tgl[i])
+                else:
+                    on_cpu[l, i] = True
+                    Tc = np.float32(Tc + tcl[i])
+            T_cpu[l], T_gpu[l] = Tc, Tg
+        return on_cpu, on_gpu, T_cpu, T_gpu
+
+
+@dataclass(frozen=True)
+class StaticAssign(AssignmentPolicy):
+    """Fiddler/HybriMoE-style workload threshold: > threshold -> GPU."""
+    threshold: float = 2.0
+    name = "static"
+
+    def assign(self, w, tc, tg):
+        on_gpu = w > self.threshold
+        on_cpu = (w > 0) & ~on_gpu
+        T_cpu = jnp.sum(jnp.where(on_cpu, tc, 0.0), axis=-1)
+        T_gpu = jnp.sum(jnp.where(on_gpu, tg, 0.0), axis=-1)
+        return on_cpu, on_gpu, T_cpu, T_gpu
+
+    def assign_np(self, w, tc, tg):
+        on_gpu = w > np.float32(self.threshold)
+        on_cpu = (w > 0) & ~on_gpu
+        T_cpu = np.where(on_cpu, tc, 0.0).astype(np.float32).sum(-1)
+        T_gpu = np.where(on_gpu, tg, 0.0).astype(np.float32).sum(-1)
+        return on_cpu, on_gpu, T_cpu, T_gpu
+
+
+class AllGpuAssign(AssignmentPolicy):
+    """Naive baseline: every activated expert executes on the GPU."""
+    name = "all_gpu"
+
+    def assign(self, w, tc, tg):
+        on_gpu = w > 0
+        on_cpu = jnp.zeros_like(on_gpu)
+        T_cpu = jnp.zeros(w.shape[0], jnp.float32)
+        T_gpu = jnp.sum(jnp.where(on_gpu, tg, 0.0), axis=-1)
+        return on_cpu, on_gpu, T_cpu, T_gpu
+
+    def assign_np(self, w, tc, tg):
+        on_gpu = w > 0
+        on_cpu = np.zeros_like(on_gpu)
+        T_cpu = np.zeros(w.shape[0], np.float32)
+        T_gpu = np.where(on_gpu, tg, 0.0).astype(np.float32).sum(-1)
+        return on_cpu, on_gpu, T_cpu, T_gpu
+
+
+class AllCpuAssign(AssignmentPolicy):
+    """Naive baseline: every activated expert executes on the CPU."""
+    name = "all_cpu"
+
+    def assign(self, w, tc, tg):
+        on_cpu = w > 0
+        on_gpu = jnp.zeros_like(on_cpu)
+        T_cpu = jnp.sum(jnp.where(on_cpu, tc, 0.0), axis=-1)
+        T_gpu = jnp.zeros(w.shape[0], jnp.float32)
+        return on_cpu, on_gpu, T_cpu, T_gpu
+
+    def assign_np(self, w, tc, tg):
+        on_cpu = w > 0
+        on_gpu = np.zeros_like(on_cpu)
+        T_cpu = np.where(on_cpu, tc, 0.0).astype(np.float32).sum(-1)
+        T_gpu = np.zeros(w.shape[0], np.float32)
+        return on_cpu, on_gpu, T_cpu, T_gpu
+
+
+# --------------------------------------------------------------------------
+# Prefetch sub-policies (predict next-layer workloads)
+# --------------------------------------------------------------------------
+
+class PrefetchPolicy:
+    """predict(sub, w, obs, ...) -> (sub', pf_pred (L, E)).  ``pf_pred[l]``
+    is the prediction *for* layer l (made while layer l-1 runs); the shared
+    ``_select_prefetch`` turns it into the prefetched set.  ``enabled``
+    False (NoPrefetch) short-circuits selection to the empty set — a
+    zero prediction must not prefetch arbitrary experts."""
+    name = "base"
+    enabled = True
+
+    def init(self, dcfg: DaliConfig):
+        return {}
+
+    def predict(self, sub, w, obs: Observation, dcfg, top_k, router_type):
+        raise NotImplementedError
+
+    def predict_np(self, sub, w, obs: Observation, dcfg, top_k, router_type):
+        raise NotImplementedError
+
+
+class ResidualPrefetch(PrefetchPolicy):
+    """The paper's residual-corrected gate replay (Eq. 10-11), stateless."""
+    name = "residual"
+
+    def predict(self, sub, w, obs, dcfg, top_k, router_type):
+        L, E = w.shape
+        if L > 1:
+            # vmapped over layers so trace size stays O(1) in L (layer l's
+            # router applied to layer l-1's corrected gate input)
+            pf_rest = jax.vmap(
+                lambda gi, rv, rt: predict_next_workload(
+                    gi, rv, rt, top_k, router_type,
+                    token_mask=obs.token_mask)
+            )(obs.gate_in[:-1], obs.res_vecs[:-1],
+              obs.routers[1:])                                 # (L-1, E)
+            pf_pred = jnp.concatenate(
+                [jnp.zeros((1, E), pf_rest.dtype), pf_rest])   # (L, E)
+        else:
+            pf_pred = jnp.zeros((L, E), jnp.int32)
+        return sub, pf_pred
+
+    def predict_np(self, sub, w, obs, dcfg, top_k, router_type):
+        L, E = w.shape
+        pf_pred = np.zeros((L, E), np.int32)
+        for l in range(1, L):
+            pf_pred[l] = _predict_next_workload_np(
+                obs.gate_in[l - 1], obs.res_vecs[l - 1], obs.routers[l],
+                top_k, router_type, token_mask=obs.token_mask)
+        return sub, pf_pred
+
+
+@dataclass(frozen=True)
+class StatisticalPrefetch(PrefetchPolicy):
+    """EdgeMoE-style historical activation frequencies.  Predicts layer l
+    from its own (decayed) workload history — observations fold in AFTER
+    predicting, so step t's prediction uses history through t-1."""
+    decay: float = 1.0
+    name = "statistical"
+
+    def init(self, dcfg):
+        return {"counts": jnp.zeros((dcfg.n_moe_layers, dcfg.n_experts),
+                                    jnp.float32)}
+
+    def predict(self, sub, w, obs, dcfg, top_k, router_type):
+        pf_pred = sub["counts"]
+        new = {"counts": self.decay * sub["counts"] + w}
+        return new, pf_pred
+
+    def predict_np(self, sub, w, obs, dcfg, top_k, router_type):
+        pf_pred = sub["counts"]
+        new = {"counts": (np.float32(self.decay) * sub["counts"]
+                          + w.astype(np.float32))}
+        return new, pf_pred
+
+
+@dataclass(frozen=True)
+class RandomPrefetch(PrefetchPolicy):
+    """Stall-inducing lower bound: random prediction scores.  The NumPy
+    mirror draws from its own generator, so parity tests check count
+    invariants rather than exact sets for this policy."""
+    seed: int = 0
+    name = "random"
+
+    def init(self, dcfg):
+        return {"key": jax.random.PRNGKey(self.seed)}
+
+    def predict(self, sub, w, obs, dcfg, top_k, router_type):
+        key, sub_key = jax.random.split(sub["key"])
+        pf_pred = jax.random.uniform(sub_key, w.shape, jnp.float32)
+        return {"key": key}, pf_pred
+
+    def predict_np(self, sub, w, obs, dcfg, top_k, router_type):
+        t = int(sub.get("t", 0))
+        rng = np.random.default_rng(self.seed * 100003 + t)
+        return {"t": np.int32(t + 1)}, \
+            rng.random(w.shape).astype(np.float32)
+
+
+class NoPrefetch(PrefetchPolicy):
+    name = "none"
+    enabled = False
+
+    def predict(self, sub, w, obs, dcfg, top_k, router_type):
+        return sub, jnp.zeros(w.shape, jnp.int32)
+
+    def predict_np(self, sub, w, obs, dcfg, top_k, router_type):
+        return sub, np.zeros(w.shape, np.int32)
+
+
+# --------------------------------------------------------------------------
+# Cache sub-policies (which experts stay device-resident)
+# --------------------------------------------------------------------------
+
+class CachePolicy:
+    """init(dcfg, key) -> (resident (L, E) bool, sub); update(...) ->
+    (resident', sub', n_swaps (L,)).  ``tick`` is the post-increment step
+    counter (windowed policies key off it)."""
+    name = "base"
+
+    def init(self, dcfg: DaliConfig, key):
+        return _random_resident(dcfg, key), {}
+
+    def init_np(self, dcfg: DaliConfig, key):
+        resident, sub = self.init(dcfg, key)
+        return np.asarray(resident), jax.tree.map(np.asarray, sub)
+
+    def update(self, sub, resident, w, gpu_active, tick, dcfg):
+        raise NotImplementedError
+
+    def update_np(self, sub, resident, w, gpu_active, tick, dcfg):
+        raise NotImplementedError
+
+
+def _cache_update(resident, scores, w, do_update, dcfg: DaliConfig):
+    """Alg. 2 for one layer: windowed swap of u_size experts (functional)."""
+    scores = scores + w.astype(jnp.float32)
+    NEG, POS = -1e30, 1e30
+    non_res_scores = jnp.where(resident, NEG, scores)
+    res_scores = jnp.where(resident, scores, POS)
+    inc_val, inc_idx = jax.lax.top_k(non_res_scores, dcfg.u_size)
+    out_val, out_idx = jax.lax.top_k(-res_scores, dcfg.u_size)
+    out_val = -out_val
+    # pair highest incoming with lowest outgoing; swap only on improvement
+    swap = (inc_val > out_val) & (inc_val > NEG / 2) & (out_val < POS / 2)
+    new_resident = resident
+    new_resident = new_resident.at[out_idx].set(
+        jnp.where(swap, False, new_resident[out_idx]))
+    new_resident = new_resident.at[inc_idx].set(
+        jnp.where(swap, True, new_resident[inc_idx]))
+    n_swaps = jnp.sum(swap.astype(jnp.int32))
+    resident = jnp.where(do_update, new_resident, resident)
+    scores = jnp.where(do_update, jnp.zeros_like(scores), scores)
+    n_swaps = jnp.where(do_update, n_swaps, 0)
+    return resident, scores, n_swaps
+
+
+def _cache_update_np(resident, scores, w, do_update, dcfg: DaliConfig):
+    scores = (scores + w.astype(np.float32)).astype(np.float32)
+    NEG, POS = np.float32(-1e30), np.float32(1e30)
+    non_res = np.where(resident, NEG, scores)
+    res_s = np.where(resident, scores, POS)
+    u = dcfg.u_size
+    # lax.top_k tie semantics: stable, lower index first
+    inc_idx = np.argsort(-non_res, kind="stable")[:u]
+    out_idx = np.argsort(res_s, kind="stable")[:u]
+    inc_val, out_val = non_res[inc_idx], res_s[out_idx]
+    swap = (inc_val > out_val) & (inc_val > NEG / 2) & (out_val < POS / 2)
+    new_resident = resident.copy()
+    new_resident[out_idx] = np.where(swap, False, new_resident[out_idx])
+    new_resident[inc_idx] = np.where(swap, True, new_resident[inc_idx])
+    if do_update:
+        return new_resident, np.zeros_like(scores), int(swap.sum())
+    return resident, scores, 0
+
+
+class WorkloadAwareCachePolicy(CachePolicy):
+    """The paper's Alg. 2: windowed workload-score swaps."""
+    name = "workload"
+
+    def init(self, dcfg, key):
+        return _random_resident(dcfg, key), {
+            "scores": jnp.zeros((dcfg.n_moe_layers, dcfg.n_experts),
+                                jnp.float32)}
+
+    def update(self, sub, resident, w, gpu_active, tick, dcfg):
+        do_update = (tick % dcfg.w_size) == 0
+        resident_new, scores_new, n_swaps = jax.vmap(
+            lambda r, s, wl: _cache_update(r, s, wl, do_update, dcfg)
+        )(resident, sub["scores"], w)
+        return resident_new, {"scores": scores_new}, n_swaps
+
+    def update_np(self, sub, resident, w, gpu_active, tick, dcfg):
+        L = resident.shape[0]
+        do_update = (int(tick) % dcfg.w_size) == 0
+        res_new = np.zeros_like(resident)
+        scores_new = np.zeros_like(sub["scores"])
+        n_swaps = np.zeros(L, np.int32)
+        for l in range(L):
+            res_new[l], scores_new[l], n_swaps[l] = _cache_update_np(
+                resident[l], sub["scores"][l], w[l], do_update, dcfg)
+        return res_new, {"scores": scores_new}, n_swaps
+
+
+_STAMP_FREE = np.iinfo(np.int32).max
+
+
+class LruCachePolicy(CachePolicy):
+    """FastMoE-style LRU over GPU-assigned experts: a hit refreshes the
+    stamp, a miss evicts the least-recently-stamped resident.  Misses ride
+    along with the demand fetch (the engine already charges those to the
+    link), so n_swaps stays 0 — matching ``cache.LRUCache``."""
+    name = "lru"
+
+    def init(self, dcfg, key):
+        return _random_resident(dcfg, key), {
+            "stamp": jnp.zeros((dcfg.n_moe_layers, dcfg.n_experts),
+                               jnp.int32),
+            "t": jnp.zeros((), jnp.int32)}
+
+    def update(self, sub, resident, w, gpu_active, tick, dcfg):
+        E = resident.shape[1]
+        t = sub["t"] + 1
+
+        def layer(resident, stamp, used):
+            def body(carry, e):
+                resident, stamp = carry
+                is_used = used[e]
+                hit = is_used & resident[e]
+                stamp = jnp.where(hit, stamp.at[e].set(t), stamp)
+                victim = jnp.argmin(jnp.where(resident, stamp, _STAMP_FREE))
+                miss = is_used & ~resident[e]
+                resident = resident.at[victim].set(
+                    jnp.where(miss, False, resident[victim]))
+                resident = resident.at[e].set(
+                    jnp.where(miss, True, resident[e]))
+                stamp = jnp.where(miss, stamp.at[e].set(t), stamp)
+                return (resident, stamp), None
+
+            (resident, stamp), _ = jax.lax.scan(
+                body, (resident, stamp), jnp.arange(E))
+            return resident, stamp
+
+        resident_new, stamp_new = jax.vmap(layer)(
+            resident, sub["stamp"], gpu_active)
+        n_swaps = jnp.zeros(resident.shape[0], jnp.int32)
+        return resident_new, {"stamp": stamp_new, "t": t}, n_swaps
+
+    def update_np(self, sub, resident, w, gpu_active, tick, dcfg):
+        L, E = resident.shape
+        t = np.int32(sub["t"] + 1)
+        resident = resident.copy()
+        stamp = sub["stamp"].copy()
+        for l in range(L):
+            for e in range(E):
+                if not gpu_active[l, e]:
+                    continue
+                if resident[l, e]:
+                    stamp[l, e] = t
+                else:
+                    victim = int(np.argmin(
+                        np.where(resident[l], stamp[l], _STAMP_FREE)))
+                    resident[l, victim] = False
+                    resident[l, e] = True
+                    stamp[l, e] = t
+        return resident, {"stamp": stamp, "t": t}, np.zeros(L, np.int32)
+
+
+class StaticCachePolicy(CachePolicy):
+    """Never replaces: the random initial residents persist (ablation
+    lower bound / MoE-Lightning-style offline placement)."""
+    name = "static"
+
+    def update(self, sub, resident, w, gpu_active, tick, dcfg):
+        return resident, sub, jnp.zeros(resident.shape[0], jnp.int32)
+
+    def update_np(self, sub, resident, w, gpu_active, tick, dcfg):
+        return resident, sub, np.zeros(resident.shape[0], np.int32)
+
+
+class NoCachePolicy(CachePolicy):
+    """No device-resident experts at all: every GPU execution is a demand
+    fetch (the 'naive on-demand' lower bound)."""
+    name = "none"
+
+    def init(self, dcfg, key):
+        return jnp.zeros((dcfg.n_moe_layers, dcfg.n_experts), bool), {}
+
+    def update(self, sub, resident, w, gpu_active, tick, dcfg):
+        return resident, sub, jnp.zeros(resident.shape[0], jnp.int32)
+
+    def update_np(self, sub, resident, w, gpu_active, tick, dcfg):
+        return resident, sub, np.zeros(resident.shape[0], np.int32)
+
+
+# --------------------------------------------------------------------------
+# The composed policy
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ComposedPolicy:
+    """OffloadPolicy built from the three sub-policies.  ``step`` is pure
+    and jit-compatible: the state pytree keeps its structure across steps
+    (asserted by the retrace test), so one compilation serves a whole
+    decode run regardless of which policy is plugged in."""
+    name: str
+    assignment: AssignmentPolicy
+    prefetch: PrefetchPolicy
+    cache: CachePolicy
+    dcfg: DaliConfig
+    top_k: int
+    router_type: str = "softmax_topk"
+    schedules: bool = field(default=True, init=False)
+
+    def init(self, key=None):
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        resident, cache_sub = self.cache.init(self.dcfg, key)
+        return {
+            "resident": resident,
+            "cache": cache_sub,
+            "prefetch": self.prefetch.init(self.dcfg),
+            "tick": jnp.zeros((), jnp.int32),
+            "acc": _init_acc(),
+        }
+
+    def init_np(self, key=None):
+        return jax.tree.map(np.asarray, self.init(key))
+
+    def step(self, state, workloads, obs: Observation):
+        """workloads (L, E) int; obs per :class:`Observation`.  Returns
+        (state', Decisions) — op-for-op the pre-refactor ``dali_schedule``
+        when the composition is greedy/residual/workload."""
+        dcfg = self.dcfg
+        w = workloads.astype(jnp.float32)
+
+        # --- prefetch: predictions for layers 1..L-1 ----------------------
+        pf_sub, pf_pred = self.prefetch.predict(
+            state["prefetch"], w, obs, dcfg, self.top_k, self.router_type)
+        prefetched = (_select_prefetch(pf_pred, dcfg.prefetch_size)
+                      if self.prefetch.enabled
+                      else jnp.zeros(w.shape, bool))
+
+        # --- assignment against the effective resident set ----------------
+        resident_eff = state["resident"] | prefetched
+        tc = _t_cpu(w, dcfg)                                       # (L, E)
+        tg = _t_gpu(w, resident_eff, dcfg)
+        on_cpu, on_gpu, T_cpu, T_gpu = self.assignment.assign(w, tc, tg)
+
+        # --- cache replacement --------------------------------------------
+        tick = state["tick"] + 1
+        gpu_active = on_gpu & (workloads > 0)
+        resident_new, cache_sub, n_swaps = self.cache.update(
+            state["cache"], state["resident"], w, gpu_active, tick, dcfg)
+
+        new_state = {"resident": resident_new, "cache": cache_sub,
+                     "prefetch": pf_sub, "tick": tick}
+        hits = jnp.sum(gpu_active & resident_eff, axis=-1)
+        misses = jnp.sum(gpu_active & ~resident_eff, axis=-1)
+        link_s = (misses.astype(jnp.float32) * dcfg.t_trans
+                  + n_swaps.astype(jnp.float32) * dcfg.t_trans
+                  + jnp.sum(prefetched, -1).astype(jnp.float32)
+                  * dcfg.t_trans)
+        step_moe_time = jnp.sum(jnp.maximum(T_cpu, T_gpu))
+        tel = {
+            "on_gpu": on_gpu, "on_cpu": on_cpu,
+            "T_cpu": T_cpu, "T_gpu": T_gpu,
+            "layer_time": jnp.maximum(T_cpu, T_gpu),
+            "hits": hits, "misses": misses, "swaps": n_swaps,
+            "prefetched": prefetched, "pf_pred": pf_pred,
+            "link_seconds": link_s,
+            "step_moe_time": step_moe_time,
+        }
+        # fold cumulative sums into the device-side accumulator so serve
+        # loops can read telemetry without a per-step host sync
+        acc = state.get("acc")
+        if acc is not None:
+            new_state["acc"] = {
+                "steps": acc["steps"] + 1,
+                "moe_time": acc["moe_time"] + step_moe_time,
+                "link_time": acc["link_time"] + jnp.sum(link_s),
+                "hits": acc["hits"] + jnp.sum(hits).astype(jnp.int32),
+                "misses": acc["misses"] + jnp.sum(misses).astype(jnp.int32),
+                "swaps": acc["swaps"] + jnp.sum(n_swaps).astype(jnp.int32),
+            }
+        return new_state, Decisions(on_gpu, prefetched, resident_eff, tel)
+
+    def step_np(self, state, workloads, obs: Observation):
+        """NumPy mirror of ``step`` (same decision semantics; float sums
+        may differ in the last ulp).  Used by the simulator replay and the
+        NumPy-vs-JAX parity tests."""
+        dcfg = self.dcfg
+        workloads = np.asarray(workloads)
+        w = workloads.astype(np.float32)
+
+        pf_sub, pf_pred = self.prefetch.predict_np(
+            state["prefetch"], w, obs, dcfg, self.top_k, self.router_type)
+        prefetched = (_select_prefetch_np(pf_pred, dcfg.prefetch_size)
+                      if self.prefetch.enabled
+                      else np.zeros(w.shape, bool))
+
+        resident_eff = state["resident"] | prefetched
+        tc = _t_cpu_np(w, dcfg)
+        tg = _t_gpu_np(w, resident_eff, dcfg)
+        on_cpu, on_gpu, T_cpu, T_gpu = self.assignment.assign_np(w, tc, tg)
+
+        tick = np.int32(state["tick"] + 1)
+        gpu_active = on_gpu & (workloads > 0)
+        resident_new, cache_sub, n_swaps = self.cache.update_np(
+            state["cache"], state["resident"], w, gpu_active, tick, dcfg)
+
+        new_state = {"resident": resident_new, "cache": cache_sub,
+                     "prefetch": pf_sub, "tick": tick}
+        hits = np.sum(gpu_active & resident_eff, axis=-1)
+        misses = np.sum(gpu_active & ~resident_eff, axis=-1)
+        t_trans = np.float32(dcfg.t_trans)
+        link_s = (misses.astype(np.float32) * t_trans
+                  + np.asarray(n_swaps, np.float32) * t_trans
+                  + prefetched.sum(-1).astype(np.float32) * t_trans)
+        step_moe_time = np.float32(np.sum(np.maximum(T_cpu, T_gpu)))
+        tel = {
+            "on_gpu": on_gpu, "on_cpu": on_cpu,
+            "T_cpu": T_cpu, "T_gpu": T_gpu,
+            "layer_time": np.maximum(T_cpu, T_gpu),
+            "hits": hits, "misses": misses, "swaps": np.asarray(n_swaps),
+            "prefetched": prefetched, "pf_pred": pf_pred,
+            "link_seconds": link_s,
+            "step_moe_time": step_moe_time,
+        }
+        acc = state.get("acc")
+        if acc is not None:
+            new_state["acc"] = {
+                "steps": np.int32(acc["steps"] + 1),
+                "moe_time": np.float32(acc["moe_time"] + step_moe_time),
+                "link_time": np.float32(acc["link_time"] + link_s.sum()),
+                "hits": np.int32(acc["hits"] + hits.sum()),
+                "misses": np.int32(acc["misses"] + misses.sum()),
+                "swaps": np.int32(acc["swaps"] + np.sum(n_swaps)),
+            }
+        return new_state, Decisions(on_gpu, prefetched, resident_eff, tel)
+
+
+@dataclass(frozen=True)
+class NullPolicy:
+    """Scheduling off: the decode step skips trace collection entirely
+    (``schedules`` gates it), so "none" costs nothing in-graph."""
+    name: str = "none"
+    schedules: bool = field(default=False, init=False)
+
+    def init(self, key=None):
+        return {}
+
+    def init_np(self, key=None):
+        return {}
+
+    def step(self, state, workloads, obs):
+        return state, Decisions(None, None, None, {})
+
+    step_np = step
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+ASSIGNMENTS = {
+    "greedy": GreedyAssign,
+    "static": StaticAssign,
+    "all_gpu": AllGpuAssign,
+    "all_cpu": AllCpuAssign,
+}
+
+PREFETCHES = {
+    "residual": ResidualPrefetch,
+    "statistical": StatisticalPrefetch,
+    "random": RandomPrefetch,
+    "none": NoPrefetch,
+}
+
+CACHES = {
+    "workload": WorkloadAwareCachePolicy,
+    "lru": LruCachePolicy,
+    "static": StaticCachePolicy,
+    "none": NoCachePolicy,
+}
+
+# name -> (assignment, prefetch, cache); "none" is the NullPolicy
+POLICY_COMPOSITIONS = {
+    "dali": ("greedy", "residual", "workload"),
+    "static": ("static", "none", "static"),
+    "all_gpu": ("all_gpu", "none", "static"),
+    "lru": ("greedy", "none", "lru"),
+    "statistical": ("greedy", "statistical", "workload"),
+    "random": ("greedy", "random", "workload"),
+}
+
+
+def policy_names():
+    return sorted(POLICY_COMPOSITIONS) + ["none"]
+
+
+def _resolve_sub(kind: str, override, default_name: str, registry):
+    """An override is a registry name, an already-built sub-policy
+    instance (parameterised, e.g. ``StaticAssign(threshold=1.0)``), or
+    None (the composition's default)."""
+    if override is None:
+        return registry[default_name]()
+    if isinstance(override, str):
+        if override not in registry:
+            raise ValueError(f"{kind} must be one of "
+                             f"{'|'.join(sorted(registry))}, "
+                             f"got {override!r}")
+        return registry[override]()
+    return override
+
+
+def make_policy(name: str, dcfg: Optional[DaliConfig] = None, *,
+                top_k: int = 1, router_type: str = "softmax_topk",
+                assignment=None, prefetch=None, cache=None):
+    """Build a registered OffloadPolicy ("dali" | "static" | "all_gpu" |
+    "lru" | "statistical" | "random" | "none").  The optional
+    ``assignment``/``prefetch``/``cache`` overrides swap one sub-policy of
+    a named composition — by registry name (``make_policy("dali",
+    cache="lru")``) or as a parameterised instance
+    (``make_policy("static", ..., assignment=StaticAssign(threshold=1.0))``).
+    """
+    if name not in POLICY_COMPOSITIONS and name != "none":
+        raise ValueError(f"policy must be one of "
+                         f"{'|'.join(policy_names())}, got {name!r}")
+    if name == "none" and (assignment or prefetch or cache):
+        raise ValueError("policy 'none' has no sub-policies to override")
+    if name == "none":
+        return NullPolicy()
+    if dcfg is None:
+        raise ValueError(f"policy {name!r} needs a DaliConfig "
+                         "(cost constants + scheduling geometry)")
+    a, p, c = POLICY_COMPOSITIONS[name]
+    return ComposedPolicy(
+        name=name,
+        assignment=_resolve_sub("assignment", assignment, a, ASSIGNMENTS),
+        prefetch=_resolve_sub("prefetch", prefetch, p, PREFETCHES),
+        cache=_resolve_sub("cache", cache, c, CACHES),
+        dcfg=dcfg, top_k=top_k, router_type=router_type)

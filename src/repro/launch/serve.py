@@ -1,17 +1,20 @@
-"""Serving launcher: continuous-batching (or wave compat) server with DALI
-offloading enabled.
+"""Serving launcher: continuous-batching (or wave compat) server with a
+pluggable offloading policy.
 
 Real run at smoke scale (CPU): trains briefly (or loads a checkpoint),
 calibrates the residual vectors on Wikitext-stand-in synthetic data, then
-serves a batch of requests with the in-graph DALI engine and reports
+serves a batch of requests with the selected in-graph policy and reports
 scheduling telemetry, per-request latency and TTFT.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
-      --requests 16 --max-new 32 --server continuous
+      --requests 16 --max-new 32 --server continuous --policy dali
 
+``--policy`` picks any registered OffloadPolicy (core/policy.py):
+dali | static | all_gpu | lru | statistical | random | none — the paper's
+method and its ablation baselines run through the same serving stack.
 ``--server wave`` selects the historical wave scheduler (equal-padded
 waves, lockstep decode) — the compat baseline the serving benchmark
-compares against; see DESIGN.md §3.
+compares against; see DESIGN.md §3/§7.
 """
 from __future__ import annotations
 
@@ -35,6 +38,11 @@ def main():
     ap.add_argument("--arch", default="mixtral-8x7b")
     ap.add_argument("--server", default="continuous",
                     choices=sorted(SERVER_PRESETS))
+    # no argparse choices=: the policy registry (core/policy.py) is the
+    # single validation point — the server lists registered names on error
+    ap.add_argument("--policy", default="dali",
+                    help="offload policy: dali|static|all_gpu|lru|"
+                         "statistical|random|none")
     ap.add_argument("--train-steps", type=int, default=120)
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--batch", type=int, default=8)
@@ -53,9 +61,10 @@ def main():
                                  corpus=corpus, seed=args.seed)
     print(f"   ce {hist[0]:.2f} -> {hist[-1]:.2f}")
 
+    policy = "none" if args.no_dali else args.policy
     dali_cfg = None
     res_vecs = None
-    if cfg.moe is not None and not args.no_dali:
+    if cfg.moe is not None and policy != "none":
         print("== calibrating residual vectors (paper Eq. 11)")
         rng = np.random.default_rng(args.seed + 1)
         calib_prompt = jnp.asarray(np.stack(
@@ -67,7 +76,8 @@ def main():
 
     server = make_server(args.server, params, cfg, batch_size=args.batch,
                          max_len=args.prompt_len + args.max_new + 2,
-                         dali_cfg=dali_cfg, res_vecs=res_vecs)
+                         dali_cfg=dali_cfg, res_vecs=res_vecs,
+                         policy=policy)
     rng = np.random.default_rng(args.seed + 2)
     for i in range(args.requests):
         server.submit(Request(rid=i,
@@ -76,8 +86,8 @@ def main():
     done = server.run()
     lat = [r.latency for r in done]
     ttft = [r.ttft for r in done if r.first_token_at]
-    print(f"== served {len(done)} requests via {args.server} | "
-          f"{server.metrics.summary()}")
+    print(f"== served {len(done)} requests via {args.server} "
+          f"(policy={policy}) | {server.metrics.summary()}")
     print(f"   latency p50={np.percentile(lat, 50):.2f}s "
           f"p95={np.percentile(lat, 95):.2f}s"
           + (f" | ttft p50={np.percentile(ttft, 50):.2f}s" if ttft else ""))

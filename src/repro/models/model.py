@@ -225,6 +225,31 @@ def stack_routers(params, cfg: ModelConfig):
     return jnp.concatenate(rows, axis=0) if rows else None
 
 
+def collect_policy_obs(params, infos, cfg: ModelConfig, token_mask=None,
+                       res_vecs=None):
+    """Build ``(workloads, Observation)`` for an OffloadPolicy step from a
+    traced forward's infos (``apply_model(trace=True)``).
+
+    With a ``token_mask`` (continuous batching: (T,) live-slot bools) the
+    per-expert workloads are recounted from per-token routing choices so
+    the policy sees only real traffic; otherwise the layer-summed workload
+    field is used directly.  ``res_vecs`` defaults to zeros (uncalibrated
+    residual correction)."""
+    from repro.core.engine import masked_workloads
+    from repro.core.policy import Observation
+    gate_in = collect_field(infos, "gate_in")               # (L, T, d)
+    routers = stack_routers(params, cfg)                    # (L, d, E)
+    if token_mask is not None:
+        topk = collect_field(infos, "topk_idx")             # (L, T, K)
+        workloads = masked_workloads(topk, cfg.moe.n_routed, token_mask)
+    else:
+        workloads = collect_field(infos, "workload")        # (L, E)
+    if res_vecs is None:
+        res_vecs = jnp.zeros((workloads.shape[0], cfg.d_model), jnp.float32)
+    return workloads, Observation(gate_in=gate_in, routers=routers,
+                                  res_vecs=res_vecs, token_mask=token_mask)
+
+
 def collect_workloads(infos):
     """Stack per-MoE-layer workload vectors -> (n_moe_layers, E) in layer
     order (prefix first, then scan stacks position-major per super-block)."""

@@ -20,6 +20,12 @@ the longest prompt in its wave and keeps slots of finished requests idle,
 so mixed-length traffic leaves throughput on the floor — kept as a stable
 baseline for tests, examples and the serving benchmark.
 
+Both servers take ``policy=`` — a registered offload-policy name
+("dali" | "static" | "all_gpu" | "lru" | "statistical" | "random" |
+"none") or an ``OffloadPolicy`` instance (core/policy.py); names are
+validated at construction.  Legacy ``dali_cfg``-only construction keeps
+meaning "dali".
+
 Telemetry is sync-free in both servers: the jitted DALI schedule folds
 per-step sums into a device-side accumulator and the aggregator drains it
 once per flush interval (``TelemetryAggregator.observe``/``flush``), so
@@ -45,7 +51,8 @@ from repro.models.config import ModelConfig
 from repro.models.model import init_caches
 from repro.serving.steps import (init_serve_state, make_admit_prefill,
                                  make_admit_step, make_decode_step,
-                                 make_prefill_step, retire_slot)
+                                 make_prefill_step, resolve_policy,
+                                 retire_slot)
 
 
 @dataclass
@@ -142,7 +149,7 @@ class ContinuousBatchServer:
     def __init__(self, params, cfg: ModelConfig, batch_size: int = 8,
                  max_len: int = 256, eos_id: int = 1,
                  dali_cfg: Optional[DaliConfig] = None, res_vecs=None,
-                 min_bucket: int = 16):
+                 min_bucket: int = 16, policy=None):
         from repro.models.config import layer_pattern
         if any(mixer == "mamba" for mixer, _ in layer_pattern(cfg)):
             # attention masks hide right-pad slots (pos = -1); a recurrent
@@ -156,12 +163,14 @@ class ContinuousBatchServer:
         self.max_len = max_len
         self.eos = eos_id
         self.dali_cfg = dali_cfg
+        # validated here, at construction (registry names listed on error)
+        self.policy = resolve_policy(policy, cfg, dali_cfg)
         self.res_vecs = res_vecs
         self.min_bucket = min_bucket
         self.queue: deque[Request] = deque()
         self.metrics = ServeMetrics()
         self._prefill = jax.jit(make_admit_prefill(cfg))
-        self._decode = jax.jit(make_decode_step(cfg, dali_cfg))
+        self._decode = jax.jit(make_decode_step(cfg, policy=self.policy))
         self._admit = jax.jit(make_admit_step(cfg))
         # rolling (sliding-window) caches keep the LAST S_c positions of a
         # prefill chunk; right-pad beyond the window would evict real prompt
@@ -211,7 +220,7 @@ class ContinuousBatchServer:
         B = self.batch
         finished: List[Request] = []
         state = init_serve_state(self.cfg, B, self.max_len,
-                                 dali_cfg=self.dali_cfg, per_slot=True)
+                                 policy=self.policy, per_slot=True)
         slot_req: List[Optional[Request]] = [None] * B
 
         while self.queue or any(slot_req):
@@ -279,19 +288,21 @@ class BatchServer:
     def __init__(self, params, cfg: ModelConfig, batch_size: int = 8,
                  max_len: int = 256, eos_id: int = 1,
                  dali_cfg: Optional[DaliConfig] = None, res_vecs=None,
-                 min_bucket: int = 16):
+                 min_bucket: int = 16, policy=None):
         self.params = params
         self.cfg = cfg
         self.batch = batch_size
         self.max_len = max_len
         self.eos = eos_id
         self.dali_cfg = dali_cfg
+        # validated here, at construction (registry names listed on error)
+        self.policy = resolve_policy(policy, cfg, dali_cfg)
         self.res_vecs = res_vecs
         self.min_bucket = min_bucket
         self.queue: deque[Request] = deque()
         self.metrics = ServeMetrics()
         self._prefill = jax.jit(make_prefill_step(cfg, max_len))
-        self._decode = jax.jit(make_decode_step(cfg, dali_cfg))
+        self._decode = jax.jit(make_decode_step(cfg, policy=self.policy))
 
     def submit(self, req: Request):
         if not req.submitted_at:
@@ -330,7 +341,7 @@ class BatchServer:
             prompts[i, S - len(r.prompt):] = r.prompt   # left-pad
 
         state = init_serve_state(self.cfg, B, self.max_len,
-                                 dali_cfg=self.dali_cfg)
+                                 policy=self.policy)
         t0 = time.perf_counter()
         tok, caches = self._prefill(self.params, jnp.asarray(prompts),
                                     state["caches"])

@@ -1,5 +1,14 @@
-"""Serving step functions: prefill / decode, with optional in-graph DALI
-scheduling for MoE architectures.
+"""Serving step functions: prefill / decode, with optional in-graph
+offload-policy scheduling for MoE architectures.
+
+Scheduling is pluggable: ``policy=`` accepts a registered policy name
+("dali" | "static" | "all_gpu" | "lru" | "statistical" | "random" |
+"none"), an :class:`repro.core.policy.OffloadPolicy` instance, or None
+(legacy: "dali" when a DaliConfig is supplied, else off).  The policy's
+state rides in ``state["dali"]`` (key name kept for compat) and its
+``step`` runs in-graph each decode step — swapping policies swaps pure
+functions over a stable state pytree, so no step function ever retraces
+per policy decision (DESIGN.md §7).
 
 The decode step is the unit the dry-run lowers for ``decode_32k`` /
 ``long_500k`` shapes: ONE new token against a KV cache of ``max_len``.
@@ -37,12 +46,38 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import (DaliConfig, dali_schedule, init_dali_state,
-                               masked_workloads)
+from repro.core.engine import DaliConfig
 from repro.models.config import ModelConfig
-from repro.models.model import (apply_model, collect_field, init_caches,
-                                stack_routers)
+from repro.models.model import (apply_model, collect_policy_obs,
+                                init_caches)
 from repro.models.moe import expert_capacity
+
+
+def resolve_policy(policy, cfg: ModelConfig,
+                   dali_cfg: Optional[DaliConfig] = None):
+    """str | OffloadPolicy | None -> OffloadPolicy.
+
+    ``None`` keeps the legacy contract: "dali" when a ``DaliConfig`` is
+    supplied, scheduling off otherwise.  String names are validated here —
+    i.e. at server/step construction — against the policy registry, and a
+    missing ``dali_cfg`` is filled from ``default_dali_config``.  Non-MoE
+    architectures have nothing to schedule and resolve to the null
+    policy whatever was asked."""
+    from repro.core.policy import make_policy, policy_names
+    if policy is None:
+        policy = "dali" if dali_cfg is not None else "none"
+    if isinstance(policy, str):
+        names = policy_names()
+        if policy not in names:
+            raise ValueError(f"policy must be one of {'|'.join(names)}, "
+                             f"got {policy!r}")
+        if policy == "none" or cfg.moe is None:
+            return make_policy("none")
+        if dali_cfg is None:
+            dali_cfg = default_dali_config(cfg)
+        return make_policy(policy, dali_cfg, top_k=cfg.moe.top_k,
+                           router_type=cfg.moe.router_type)
+    return policy
 
 
 def make_prefill_step(cfg: ModelConfig, max_len: int,
@@ -130,16 +165,20 @@ def retire_slot(state, slot: int):
 
 def make_decode_step(cfg: ModelConfig, dali_cfg: Optional[DaliConfig] = None,
                      moe_capacity: Optional[int] = None,
-                     sample: bool = False, temperature: float = 1.0):
+                     sample: bool = False, temperature: float = 1.0,
+                     policy=None):
     """Returns decode(params, state, res_vecs=None) -> (state', logits,
-    telemetry).  With ``dali_cfg`` the DALI scheduler (greedy assignment +
-    residual prefetch + workload cache, paper §4) runs in-graph each step.
+    telemetry).  ``policy`` (name, OffloadPolicy, or None — see
+    ``resolve_policy``) selects the in-graph offloading scheduler; the
+    legacy ``dali_cfg``-only call builds the "dali" policy (greedy
+    assignment + residual prefetch + workload cache, paper §4).
 
     Works for both serve-state layouts: a scalar ``pos`` decodes the wave
     way (shared position); a per-slot ``pos`` (B,) uses per-row positions
-    and, when DALI is on, masks routing observables by ``state["active"]``
-    so scheduling sees the actual per-step token mix."""
-    use_dali = dali_cfg is not None and cfg.moe is not None
+    and, when scheduling is on, masks routing observables by
+    ``state["active"]`` so the policy sees the actual per-step token mix."""
+    policy = resolve_policy(policy, cfg, dali_cfg)
+    use_policy = policy.schedules and cfg.moe is not None
 
     def decode(params, state, res_vecs=None):
         per_slot = state["pos"].ndim == 1
@@ -152,7 +191,7 @@ def make_decode_step(cfg: ModelConfig, dali_cfg: Optional[DaliConfig] = None,
         logits, caches, infos = apply_model(
             params, state["tokens"], cfg, positions=positions,
             caches=state["caches"], moe_capacity=moe_capacity,
-            trace=use_dali)
+            trace=use_policy)
         if sample:
             rng, sub = jax.random.split(state["rng"])
             nxt = jax.random.categorical(
@@ -169,22 +208,13 @@ def make_decode_step(cfg: ModelConfig, dali_cfg: Optional[DaliConfig] = None,
         new_state = dict(state, tokens=nxt.astype(jnp.int32),
                          pos=new_pos, caches=caches, rng=rng)
         telemetry = {}
-        if use_dali:
-            gate_in = collect_field(infos, "gate_in")           # (L, T, d)
-            routers = stack_routers(params, cfg)                # (L, d, E)
-            if per_slot:
-                topk = collect_field(infos, "topk_idx")         # (L, T, K)
-                workloads = masked_workloads(topk, cfg.moe.n_routed, active)
-            else:
-                workloads = collect_field(infos, "workload")    # (L, E)
-            if res_vecs is None:
-                res_vecs = jnp.zeros(
-                    (workloads.shape[0], cfg.d_model), jnp.float32)
-            new_dali, telemetry = dali_schedule(
-                state["dali"], workloads, gate_in, routers, res_vecs,
-                dali_cfg, top_k=cfg.moe.top_k,
-                router_type=cfg.moe.router_type, token_mask=active)
-            new_state["dali"] = new_dali
+        if use_policy:
+            workloads, obs = collect_policy_obs(
+                params, infos, cfg, token_mask=active, res_vecs=res_vecs)
+            new_pstate, decisions = policy.step(state["dali"], workloads,
+                                                obs)
+            telemetry = decisions.tel
+            new_state["dali"] = new_pstate
         return new_state, logits, telemetry
 
     return decode
@@ -193,7 +223,7 @@ def make_decode_step(cfg: ModelConfig, dali_cfg: Optional[DaliConfig] = None,
 def init_serve_state(cfg: ModelConfig, batch: int, max_len: int,
                      dali_cfg: Optional[DaliConfig] = None,
                      dtype=None, n_cross: Optional[int] = None, seed: int = 0,
-                     per_slot: bool = False):
+                     per_slot: bool = False, policy=None):
     state = {
         "tokens": jnp.zeros((batch, 1), jnp.int32),
         "pos": (jnp.zeros((batch,), jnp.int32) if per_slot
@@ -204,8 +234,9 @@ def init_serve_state(cfg: ModelConfig, batch: int, max_len: int,
     }
     if per_slot:
         state["active"] = jnp.zeros((batch,), bool)
-    if dali_cfg is not None and cfg.moe is not None:
-        state["dali"] = init_dali_state(dali_cfg)
+    policy = resolve_policy(policy, cfg, dali_cfg)
+    if policy.schedules and cfg.moe is not None:
+        state["dali"] = policy.init()
     return state
 
 
