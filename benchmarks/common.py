@@ -62,6 +62,7 @@ SUITE_SPECS = {
     "ep_exchange": ("ep_exchange", "main"),         # DESIGN.md §6
     "serving": ("serving_throughput", "main"),      # DESIGN.md §3
     "policy_ablation": ("policy_ablation", "main"),  # DESIGN.md §7
+    "offload_stream": ("offload_stream", "main"),   # DESIGN.md §8
 }
 
 

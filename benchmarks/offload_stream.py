@@ -1,0 +1,231 @@
+"""Physical expert offload: modeled vs blocking vs overlapped streaming.
+
+The policy layer decides *what* should be device-resident; this benchmark
+measures what it costs to make that physically true
+(serving/expert_store.py, DESIGN.md §8).  Three modes run the SAME jitted
+decode step with the SAME "dali" policy on the E=16 bench variant at the
+paper's B=1 local-PC decode setting:
+
+  * **modeled**  — every expert weight stays on device; policy decisions
+    feed telemetry only (the pre-PR-5 behaviour; the no-offload-cost
+    reference).
+  * **blocking** — routed expert weights live in the host store and decode
+    reads a device slot pool; each step's slot plan is streamed
+    host→device BEFORE the step dispatches and waited on — transfers sit
+    on the critical path (the naive on-demand baseline).
+  * **overlap**  — the same plan is issued right AFTER the decode
+    dispatch, so the H2D copy fills the next pool generation while the
+    current step computes (double-buffered; DAOP-style predictive
+    pre-loading made physical).
+
+The blocking-vs-overlap gap is the wall-clock value of copy/compute
+overlap — the paper's central perf lever.  Physical modes also decode
+against ``strip_expert_params`` (expert stacks removed from the device
+params), so the run itself proves decode never touches them.
+
+The link constants are re-fitted from real ``device_put`` timings
+(``CostModel.calibrate_link``) and baked into the policy's DaliConfig, so
+the scheduler's modeled transfer cost and the measured streaming share
+constants.  Writes reports/bench/BENCH_offload_stream.json.
+
+  PYTHONPATH=src python -m benchmarks.offload_stream --smoke   # CI tier-2
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+BENCH_DIR = os.path.normpath(os.path.join(
+    os.path.dirname(__file__), "..", "reports", "bench"))
+
+MODES = ("modeled", "blocking", "overlap")
+
+
+def make_runner(mode: str, params, cfg, pol, res_vecs, *, batch: int,
+                max_len: int, steps: int, warmup: int = 8,
+                fallback: str = "fetch", seed: int = 0):
+    """Build a ``one_pass()`` closure for one offload mode: ``steps``
+    timed decode steps (serving-loop semantics: per-step token sync,
+    pool streamed from the previous step's cache ∪ prefetch) after
+    ``warmup`` untimed steps from a fresh serve state, returning wall
+    µs/step.  ``runner.store`` exposes the mode's ExpertStore (None for
+    "modeled")."""
+    from repro.serving.expert_store import strip_expert_params
+    from repro.serving.scheduler import make_store
+    from repro.serving.steps import init_serve_state, make_decode_step
+
+    store = None
+    dec_params = params
+    if mode != "modeled":
+        store = make_store(mode, params, cfg, pol, fallback=fallback)
+        dec_params = strip_expert_params(params, cfg)
+    decode = jax.jit(make_decode_step(cfg, policy=pol, offload=store))
+
+    def step(state, target):
+        # the store's hooks schedule the streaming around the dispatch:
+        # blocking pays stage+commit on the critical path here, overlap
+        # commits at the (idle) step boundary and stages behind compute
+        if store is not None:
+            state["offload"] = store.pre_step(state["offload"], mode, target)
+        state, _, tel = decode(dec_params, state, res_vecs)
+        if store is not None:
+            store.post_dispatch(mode, target)
+        np.asarray(state["tokens"])              # per-step sync (serving)
+        if store is not None:
+            target = store.next_target(state, tel)
+        return state, target
+
+    def one_pass():
+        state = init_serve_state(cfg, batch, max_len, policy=pol,
+                                 seed=seed, offload=store)
+        target = None
+        for _ in range(warmup):
+            state, target = step(state, target)
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            state, target = step(state, target)
+        return (time.perf_counter() - t0) / steps * 1e6
+
+    one_pass.store = store
+    return one_pass
+
+
+def run_modes(params, cfg, pol, res_vecs, *, batch: int, max_len: int,
+              steps: int, reps: int, warmup: int = 8,
+              fallback: str = "fetch", seed: int = 0):
+    """Run all three modes with their passes INTERLEAVED round-robin, so
+    machine drift (thermal, page cache, co-tenants) lands on every mode
+    equally rather than biasing whichever ran last.  Returns per-mode
+    records; wall µs/step is the per-mode median over ``reps`` passes."""
+    runners = {m: make_runner(m, params, cfg, pol, res_vecs, batch=batch,
+                              max_len=max_len, steps=steps, warmup=warmup,
+                              fallback=fallback, seed=seed)
+               for m in MODES}
+    walls = {m: [] for m in MODES}
+    for r in range(reps):
+        for m in MODES:
+            walls[m].append(runners[m]())
+    rows = []
+    total_steps = reps * (steps + warmup)         # rate denominators
+    for m in MODES:
+        st = runners[m].store.stats() if runners[m].store else {}
+        wall_us = float(np.median(walls[m]))
+        rows.append({
+            "mode": m,
+            "wall_us_per_step": round(wall_us, 1),
+            "decode_tok_s": round(batch * 1e6 / wall_us, 2),
+            "h2d_rows_per_step": (round(st["h2d_rows"] / total_steps, 2)
+                                  if st else 0.0),
+            "h2d_mb_per_step": (round(st["h2d_bytes"] / total_steps / 1e6, 3)
+                                if st else 0.0),
+            "fallback_rows_per_step": (
+                round(st["fallback_rows"] / total_steps, 2) if st else 0.0),
+        })
+    return rows
+
+
+def main(argv=None):
+    from benchmarks.common import load_model
+    from repro.core.policy import DaliConfig, make_policy
+    from repro.models.config import layer_pattern
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--experts", type=int, default=16,
+                    help="routed experts in the bench variant (E >> "
+                         "cache_size is the paper's regime; shares the "
+                         "policy_ablation model cache)")
+    ap.add_argument("--batch", type=int, default=1,
+                    help="decode batch; 1 is the paper's local-PC "
+                         "single-user setting")
+    ap.add_argument("--steps", type=int, default=32,
+                    help="timed decode steps per pass")
+    ap.add_argument("--reps", type=int, default=0,
+                    help="fresh-state passes (median reported); 0 = auto")
+    ap.add_argument("--cache-ratio", type=float, default=0.5)
+    ap.add_argument("--prefetch-size", type=int, default=2)
+    ap.add_argument("--fallback", default="fetch", choices=["fetch", "host"],
+                    help="miss tier: demand-fetch weights (bit-exact) or "
+                         "host-executed FFN (the CPU tier)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced steps/training for CI tier-2 (recorded "
+                         "in the JSON)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.steps = min(args.steps, 20)
+    reps = args.reps or (5 if args.smoke else 9)
+
+    def widen(cfg):
+        return cfg.replace(moe=dataclasses.replace(
+            cfg.moe, n_routed=args.experts))
+
+    bm = load_model(args.arch, train_steps=60 if args.smoke else 150,
+                    seed=args.seed, cfg_transform=widen,
+                    tag=f"-e{args.experts}")
+    cfg = bm.cfg
+    E = cfg.moe.n_routed
+    print("== calibrating link constants from device_put timings")
+    cm = bm.cost.calibrate_link()
+    print(f"   fitted link: {cm.link_gbps:.2f} GB/s, "
+          f"latency {cm.link_latency_s*1e6:.1f} µs "
+          f"(profile: {cm.profile.link_gbps} GB/s)")
+    n_moe = sum(1 for _, mlp in layer_pattern(cfg) if mlp == "moe")
+    dcfg = DaliConfig.from_cost_model(
+        cm, n_moe_layers=n_moe, n_experts=E,
+        cache_size=max(1, int(E * args.cache_ratio)),
+        prefetch_size=args.prefetch_size)
+    pol = make_policy("dali", dcfg, top_k=cfg.moe.top_k,
+                      router_type=cfg.moe.router_type)
+    res_vecs = jnp.asarray(np.stack(bm.res_vecs))
+    max_len = args.steps + 16
+
+    print(f"== running {'|'.join(MODES)} interleaved, {reps} passes x "
+          f"{args.steps} steps")
+    rows = run_modes(bm.params, cfg, pol, res_vecs, batch=args.batch,
+                     max_len=max_len, steps=args.steps, reps=reps,
+                     fallback=args.fallback, seed=args.seed)
+
+    from benchmarks.report_md import offload_stream_table
+    print()
+    for line in offload_stream_table(rows):
+        print(line)
+    by = {r["mode"]: r for r in rows}
+    faster = (by["overlap"]["wall_us_per_step"]
+              < by["blocking"]["wall_us_per_step"])
+    speedup = (by["blocking"]["wall_us_per_step"]
+               / by["overlap"]["wall_us_per_step"])
+    print(f"\noverlap {'IS' if faster else 'is NOT'} faster than blocking "
+          f"({speedup:.2f}x); modeled reference "
+          f"{by['modeled']['wall_us_per_step']:.0f} µs/step")
+
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    out = os.path.join(BENCH_DIR, "BENCH_offload_stream.json")
+    with open(out, "w") as f:
+        json.dump({"arch": args.arch, "backend": jax.default_backend(),
+                   "smoke": bool(args.smoke),
+                   "workload": {"batch": args.batch, "steps": args.steps,
+                                "reps": reps, "experts": args.experts,
+                                "cache_ratio": args.cache_ratio,
+                                "prefetch_size": args.prefetch_size,
+                                "fallback": args.fallback},
+                   "link_fit": {"gbps": round(cm.link_gbps, 3),
+                                "latency_us": round(
+                                    cm.link_latency_s * 1e6, 2),
+                                "expert_bytes": cm.expert_bytes},
+                   "overlap_faster_than_blocking": bool(faster),
+                   "overlap_speedup": round(speedup, 3),
+                   "rows": rows}, f, indent=2)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,14 @@
 """Paper Fig. 19-style breakdown: Naive (all-CPU) -> +Greedy Assignment ->
 +Residual Prefetching -> +Workload-Aware Cache, replayed over a real
 routing trace of a trained smoke-scale MoE under the paper's local-PC cost
-profile.
+profile — then the same "dali" policy run PHYSICALLY: expert weights in a
+host store, decode against a device slot pool, modeled vs blocking vs
+overlapped H2D streaming side by side (DESIGN.md §8).
 
   PYTHONPATH=src python examples/offload_ablation.py
 """
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -71,11 +75,51 @@ def main():
         cm, n_moe_layers=trace.n_moe_layers, n_experts=E,
         cache_size=E // 4, prefetch_size=1, w_size=4, u_size=1)
     print(f"\n{'--policy':26s} {'tok/s':>8s} {'hit%':>6s}")
-    for name in ("none", "all_gpu", "static", "lru", "dali"):
+    for name in ("none", "all_gpu", "static", "lru", "score", "dali"):
         r = simulate_policy(trace, cfg, cm, name, dcfg=dcfg, gate_ws=gws,
                             res_vecs=res, batch=8, ctx_len=32)
         print(f"{name:26s} {r.tokens_per_s:8.2f} "
               f"{100*r.cache_hit_rate:5.1f}")
+
+    # the modeled rows above estimate offload cost; the physical rows
+    # below MEASURE it — the identical "dali" policy drives a host
+    # expert store + device slot pool through one B=1 decode loop per
+    # --offload mode (serving/expert_store.py; wall time includes the
+    # pool streaming each mode schedules differently)
+    from repro.core.policy import make_policy
+    from repro.serving.expert_store import strip_expert_params
+    from repro.serving.steps import init_serve_state, make_decode_step
+    from repro.serving.scheduler import make_store
+    pol = make_policy("dali", dcfg, top_k=cfg.moe.top_k,
+                      router_type=cfg.moe.router_type)
+    rv = jnp.asarray(np.stack(res))
+    warm, steps = 8, 20
+    print(f"\n{'--offload':26s} {'wall µs/step':>12s} {'streamed MB':>12s}")
+    for mode in ("modeled", "blocking", "overlap"):
+        store = make_store(mode, params, cfg, pol)
+        dparams = (params if store is None
+                   else strip_expert_params(params, cfg))
+        decode = jax.jit(make_decode_step(cfg, policy=pol, offload=store))
+        state = init_serve_state(cfg, 1, 64, policy=pol, offload=store)
+        target = None
+        for t in range(warm + steps):
+            if t == warm:
+                t0 = time.perf_counter()
+            # the store's hooks schedule the streaming around the
+            # dispatch (blocking: on the critical path; overlap: commit
+            # at the idle boundary, stage behind the in-flight step)
+            if store is not None:
+                state["offload"] = store.pre_step(state["offload"], mode,
+                                                  target)
+            state, _, tel = decode(dparams, state, rv)
+            if store is not None:
+                store.post_dispatch(mode, target)
+            np.asarray(state["tokens"])
+            if store is not None:
+                target = store.next_target(state, tel)
+        us = (time.perf_counter() - t0) / steps * 1e6
+        mb = store.h2d_bytes / 1e6 if store is not None else 0.0
+        print(f"{mode:26s} {us:12.0f} {mb:12.2f}")
 
 
 if __name__ == "__main__":

@@ -3,9 +3,11 @@
 The paper obtains ``t_cpu(w)``, ``t_gpu(w)`` and ``trans_time`` by warm-up
 profiling on the target platform and reuses them for all later inference.
 We do the same: analytic profiles matching the paper's platform (EPYC 7532 +
-RTX 3090 + PCIe 4.0 x16) and a TPU-v5e host-offload profile are built in,
-and ``calibrate_cpu`` can re-fit the CPU line from real matmul timings on
-the current host (the only tier that physically exists in this container).
+RTX 3090 + PCIe 4.0 x16) and a TPU-v5e host-offload profile are built in;
+``calibrate_cpu`` re-fits the CPU line from real matmul timings on the
+current host and ``calibrate_link`` re-fits the link constants from real
+``device_put`` timings of expert-sized buffers — the same transfers the
+physical offload path issues (serving/expert_store.py, DESIGN.md §8).
 
 All times are in seconds; workloads ``w`` are token counts per expert.
 """
@@ -75,6 +77,9 @@ class CostModel:
     # fitted CPU line overrides (from calibrate_cpu)
     cpu_alpha: float | None = None
     cpu_beta: float | None = None   # seconds per token
+    # fitted link overrides (from calibrate_link)
+    link_gbps: float | None = None
+    link_latency_s: float | None = None
 
     @classmethod
     def for_config(cls, cfg: ModelConfig,
@@ -94,9 +99,14 @@ class CostModel:
 
     @property
     def trans_time(self) -> float:
-        """Eq. 6: constant PCIe/DMA time to move one expert's weights."""
-        return (self.profile.link_latency_s
-                + self.expert_bytes / (self.profile.link_gbps * 1e9))
+        """Eq. 6: constant PCIe/DMA time to move one expert's weights
+        (measured link constants from ``calibrate_link`` when fitted,
+        else the hardware profile's)."""
+        lat = (self.link_latency_s if self.link_latency_s is not None
+               else self.profile.link_latency_s)
+        gbps = (self.link_gbps if self.link_gbps is not None
+                else self.profile.link_gbps)
+        return lat + self.expert_bytes / (gbps * 1e9)
 
     def t_cpu(self, w) -> np.ndarray:
         """Eq. 4 term: CPU execution time for workload w (0 if w == 0).
@@ -161,3 +171,31 @@ class CostModel:
         (alpha, beta), *_ = np.linalg.lstsq(A, np.asarray(ts), rcond=None)
         return dataclasses.replace(self, cpu_alpha=float(max(alpha, 1e-6)),
                                    cpu_beta=float(max(beta, 1e-9)))
+
+    def calibrate_link(self, n_experts=(1, 2, 4, 8), repeats: int = 5):
+        """Fit trans_time(n) = latency + n·expert_bytes/(gbps·1e9) from
+        real ``jax.device_put`` timings of expert-sized host buffers —
+        the same transfer the physical offload path issues when it
+        streams an expert into the device slot pool
+        (serving/expert_store.py).  Mirrors ``calibrate_cpu``; the
+        fitted constants flow into ``trans_time`` and from there into
+        ``DaliConfig.from_cost_model``, so the scheduler and the
+        streaming benchmark share measured numbers."""
+        import jax
+        dt = np.float16 if self.dtype_bytes == 2 else np.float32
+        dev = jax.devices()[0]
+        ts, sizes = [], []
+        for n in n_experts:
+            buf = np.ones((n, 3, self.d_model, self.d_expert), dt)
+            jax.block_until_ready(jax.device_put(buf, dev))      # warm-up
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                jax.block_until_ready(jax.device_put(buf, dev))
+            ts.append((time.perf_counter() - t0) / repeats)
+            sizes.append(buf.nbytes)
+        A = np.stack([np.ones(len(sizes)), np.asarray(sizes, np.float64)], 1)
+        (lat, per_b), *_ = np.linalg.lstsq(A, np.asarray(ts), rcond=None)
+        per_b = max(float(per_b), 1e-12)                 # seconds per byte
+        return dataclasses.replace(
+            self, link_latency_s=float(max(lat, 1e-7)),
+            link_gbps=1.0 / (per_b * 1e9))

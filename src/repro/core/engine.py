@@ -14,10 +14,15 @@ compat wrappers over ``core/policy.py`` (DESIGN.md §7):
   * ``predict_next_workload`` / ``DaliConfig`` — re-exports
 
 The *decisions* are bit-exact with the pre-refactor monolith (fixture-
-tested in tests/test_policy.py) and with the host/numpy implementations;
-device-side numerics are unchanged (all activated experts compute on the
-accelerator in this container — the CPU tier exists in the timing model,
-see DESIGN.md §2).
+tested in tests/test_policy.py) and with the host/numpy implementations.
+Since the physical residency subsystem landed
+(serving/expert_store.py), the decisions also drive real data movement
+when serving runs with ``--offload blocking|overlap``: the cache ∪
+prefetch set is lowered to slot plans streamed into a device slot pool,
+and non-resident activated experts are served from the host tier
+(demand-fetched weights or host-executed FFN).  In the default
+``--offload modeled`` mode the telemetry remains an estimate under the
+paper's hardware model (DESIGN.md §2/§8).
 """
 from __future__ import annotations
 

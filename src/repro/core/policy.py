@@ -26,9 +26,10 @@ parity-tested against each other on identical routing traces
 (tests/test_policy.py).
 
 String registry (``make_policy``): "dali", "static", "all_gpu", "lru",
-"statistical", "random", "none".  "dali" reproduces the pre-refactor
-``engine.dali_schedule`` bit-exactly (fixture-tested); ``dali_schedule``
-itself survives as a thin compat wrapper over this module.
+"score", "statistical", "random", "none".  "dali" reproduces the
+pre-refactor ``engine.dali_schedule`` bit-exactly (fixture-tested);
+``dali_schedule`` itself survives as a thin compat wrapper over this
+module.
 """
 from __future__ import annotations
 
@@ -614,6 +615,62 @@ class LruCachePolicy(CachePolicy):
         return resident, {"stamp": stamp, "t": t}, np.zeros(L, np.int32)
 
 
+@dataclass(frozen=True)
+class ScoreCachePolicy(CachePolicy):
+    """HybriMoE-style score-EMA replacement (jit twin of the numpy-only
+    ``cache.ScoreCache``): per-layer activation scores decay by
+    ``decay`` and accumulate the step's workload; each GPU-activated
+    non-resident expert then evicts the lowest-scoring resident iff it
+    outscores it.  Like LRU, replacements ride along with the demand
+    fetch the engine already charges, so n_swaps stays 0."""
+    decay: float = 0.7
+    name = "score"
+
+    def init(self, dcfg, key):
+        return _random_resident(dcfg, key), {
+            "score": jnp.zeros((dcfg.n_moe_layers, dcfg.n_experts),
+                               jnp.float32)}
+
+    def update(self, sub, resident, w, gpu_active, tick, dcfg):
+        E = resident.shape[1]
+        score = jnp.float32(self.decay) * sub["score"] + w
+        POS = jnp.float32(np.finfo(np.float32).max)
+
+        def layer(resident, sc, used):
+            def body(resident, e):
+                victim = jnp.argmin(jnp.where(resident, sc, POS))
+                miss = used[e] & ~resident[e] & (sc[e] > sc[victim])
+                resident = resident.at[victim].set(
+                    jnp.where(miss, False, resident[victim]))
+                resident = resident.at[e].set(
+                    jnp.where(miss, True, resident[e]))
+                return resident, None
+
+            resident, _ = jax.lax.scan(body, resident, jnp.arange(E))
+            return resident
+
+        resident_new = jax.vmap(layer)(resident, score, gpu_active)
+        n_swaps = jnp.zeros(resident.shape[0], jnp.int32)
+        return resident_new, {"score": score}, n_swaps
+
+    def update_np(self, sub, resident, w, gpu_active, tick, dcfg):
+        L, E = resident.shape
+        score = (np.float32(self.decay) * sub["score"]
+                 + w.astype(np.float32)).astype(np.float32)
+        resident = resident.copy()
+        for l in range(L):
+            for e in range(E):
+                if not gpu_active[l, e] or resident[l, e]:
+                    continue
+                # argmin tie semantics: lowest index wins (matches jnp)
+                victim = int(np.argmin(np.where(
+                    resident[l], score[l], np.finfo(np.float32).max)))
+                if score[l, e] > score[l, victim]:
+                    resident[l, victim] = False
+                    resident[l, e] = True
+        return resident, {"score": score}, np.zeros(L, np.int32)
+
+
 class StaticCachePolicy(CachePolicy):
     """Never replaces: the random initial residents persist (ablation
     lower bound / MoE-Lightning-style offline placement)."""
@@ -828,6 +885,7 @@ PREFETCHES = {
 CACHES = {
     "workload": WorkloadAwareCachePolicy,
     "lru": LruCachePolicy,
+    "score": ScoreCachePolicy,
     "static": StaticCachePolicy,
     "none": NoCachePolicy,
 }
@@ -838,6 +896,7 @@ POLICY_COMPOSITIONS = {
     "static": ("static", "none", "static"),
     "all_gpu": ("all_gpu", "none", "static"),
     "lru": ("greedy", "none", "lru"),
+    "score": ("greedy", "none", "score"),
     "statistical": ("greedy", "statistical", "workload"),
     "random": ("greedy", "random", "workload"),
 }
@@ -866,7 +925,7 @@ def make_policy(name: str, dcfg: Optional[DaliConfig] = None, *,
                 top_k: int = 1, router_type: str = "softmax_topk",
                 assignment=None, prefetch=None, cache=None):
     """Build a registered OffloadPolicy ("dali" | "static" | "all_gpu" |
-    "lru" | "statistical" | "random" | "none").  The optional
+    "lru" | "score" | "statistical" | "random" | "none").  The optional
     ``assignment``/``prefetch``/``cache`` overrides swap one sub-policy of
     a named composition — by registry name (``make_policy("dali",
     cache="lru")``) or as a parameterised instance

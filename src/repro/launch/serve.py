@@ -7,14 +7,19 @@ serves a batch of requests with the selected in-graph policy and reports
 scheduling telemetry, per-request latency and TTFT.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
-      --requests 16 --max-new 32 --server continuous --policy dali
+      --requests 16 --max-new 32 --server continuous --policy dali \
+      --offload overlap
 
 ``--policy`` picks any registered OffloadPolicy (core/policy.py):
-dali | static | all_gpu | lru | statistical | random | none — the paper's
-method and its ablation baselines run through the same serving stack.
-``--server wave`` selects the historical wave scheduler (equal-padded
-waves, lockstep decode) — the compat baseline the serving benchmark
-compares against; see DESIGN.md §3/§7.
+dali | static | all_gpu | lru | score | statistical | random | none —
+the paper's method and its ablation baselines run through the same
+serving stack.  ``--offload`` picks how the policy's decisions reach the
+hardware: "modeled" (telemetry only, every expert on device), "blocking"
+or "overlap" (physical host store + device slot pool, copies on or off
+the decode critical path — DESIGN.md §8).  ``--server wave`` selects the
+historical wave scheduler (equal-padded waves, lockstep decode) — the
+compat baseline the serving benchmark compares against; see DESIGN.md
+§3/§7.
 """
 from __future__ import annotations
 
@@ -41,8 +46,14 @@ def main():
     # no argparse choices=: the policy registry (core/policy.py) is the
     # single validation point — the server lists registered names on error
     ap.add_argument("--policy", default="dali",
-                    help="offload policy: dali|static|all_gpu|lru|"
+                    help="offload policy: dali|static|all_gpu|lru|score|"
                          "statistical|random|none")
+    ap.add_argument("--offload", default="modeled",
+                    choices=["modeled", "blocking", "overlap"],
+                    help="physical expert residency: modeled (decisions "
+                         "feed telemetry only), blocking / overlap "
+                         "(host store + device slot pool; copies on / "
+                         "off the decode critical path)")
     ap.add_argument("--train-steps", type=int, default=120)
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--batch", type=int, default=8)
@@ -77,7 +88,7 @@ def main():
     server = make_server(args.server, params, cfg, batch_size=args.batch,
                          max_len=args.prompt_len + args.max_new + 2,
                          dali_cfg=dali_cfg, res_vecs=res_vecs,
-                         policy=policy)
+                         policy=policy, offload=args.offload)
     rng = np.random.default_rng(args.seed + 2)
     for i in range(args.requests):
         server.submit(Request(rid=i,
@@ -87,7 +98,13 @@ def main():
     lat = [r.latency for r in done]
     ttft = [r.ttft for r in done if r.first_token_at]
     print(f"== served {len(done)} requests via {args.server} "
-          f"(policy={policy}) | {server.metrics.summary()}")
+          f"(policy={policy}, offload={args.offload}) | "
+          f"{server.metrics.summary()}")
+    if server.store is not None:
+        st = server.store.stats()
+        print(f"   physical offload: streamed {st['h2d_rows']} experts "
+              f"({st['h2d_bytes']/1e6:.1f} MB) | miss fallback "
+              f"{st['fallback_rows']} (token,k) slots")
     print(f"   latency p50={np.percentile(lat, 50):.2f}s "
           f"p95={np.percentile(lat, 95):.2f}s"
           + (f" | ttft p50={np.percentile(ttft, 50):.2f}s" if ttft else ""))

@@ -56,7 +56,8 @@ def init_block(key, cfg: ModelConfig, kinds):
 
 def apply_block(params, x, cfg: ModelConfig, kinds, *, positions,
                 cache=None, cross_src=None, causal: bool = True,
-                moe_capacity: Optional[int] = None):
+                moe_capacity: Optional[int] = None,
+                slots=None, slot_fetch=None, slot_live=None):
     mixer_kind, mlp_kind = kinds
     moe_info = None
     new_cache = cache
@@ -103,7 +104,9 @@ def apply_block(params, x, cfg: ModelConfig, kinds, *, positions,
         h = apply_norm(params["norm2"], x, cfg)
         if mlp_kind == "moe":
             y, moe_info = apply_moe(params["mlp"], h, cfg,
-                                    capacity=moe_capacity)
+                                    capacity=moe_capacity,
+                                    slots=slots, slot_fetch=slot_fetch,
+                                    slot_live=slot_live)
         else:
             y = apply_mlp(params["mlp"], h, cfg)
             if mixer_kind == "cross":   # gated FFN on VLM cross layers

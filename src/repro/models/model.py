@@ -90,7 +90,8 @@ def apply_encoder(params, src, cfg: ModelConfig):
 def apply_model(params, tokens, cfg: ModelConfig, *, positions=None,
                 caches=None, cross_src=None, moe_capacity=None,
                 trace: bool = False, last_logit_only: bool = False,
-                logit_index=None):
+                logit_index=None, expert_slots=None, slot_fetch=None,
+                slot_live=None):
     """tokens (B, S) int32.  Returns (logits, new_caches, infos) where infos
     is a list (prefix layers) + list (scan stacks, leaves stacked (n_super,
     ...)) of MoE routing observables (None for non-MoE blocks).
@@ -99,7 +100,15 @@ def apply_model(params, tokens, cfg: ModelConfig, *, positions=None,
     offsets for continuous batching (see attention.py).  ``logit_index``
     (traced scalar) unembeds only that sequence position — the
     prefill-on-admit path where the last *real* token of a right-padded
-    prompt sits at ``length - 1``, not at ``S - 1``."""
+    prompt sits at ``length - 1``, not at ``S - 1``.
+
+    ``expert_slots`` (an ``ExpertStore.build_view`` pytree: per-MoE-layer
+    device slot-pool slices, scan entries stacked (n_super, ...)) plus
+    ``slot_fetch`` (the store, for miss fallbacks) switch MoE layers to
+    the physical-offload slot path; slot slices thread through the scan
+    exactly like caches.  ``slot_live`` (B·S,) bool marks live batch
+    slots so dead rows never trigger miss fallbacks (invariant across
+    layers — a scan constant, not an xs)."""
     prefix_pat, period_pat, n_super = scan_pattern(cfg)
     B, S = tokens.shape
     if positions is None:
@@ -111,6 +120,10 @@ def apply_model(params, tokens, cfg: ModelConfig, *, positions=None,
     from repro.launch.sharding import hint
     x = hint(embed(params["embed"], tokens, cfg),
              "batch", "res_seq", "embed")
+    slots_prefix = (expert_slots["prefix"] if expert_slots is not None
+                    else tuple(None for _ in prefix_pat))
+    slots_scan = (expert_slots["scan"] if expert_slots is not None
+                  else tuple(None for _ in period_pat))
     infos = []
     new_prefix_caches = []
     for i, kinds in enumerate(prefix_pat):
@@ -118,12 +131,15 @@ def apply_model(params, tokens, cfg: ModelConfig, *, positions=None,
         x, c, info = apply_block(params["prefix"][i], x, cfg, kinds,
                                  positions=positions, cache=c,
                                  cross_src=cross_src,
-                                 moe_capacity=moe_capacity)
+                                 moe_capacity=moe_capacity,
+                                 slots=slots_prefix[i],
+                                 slot_fetch=slot_fetch,
+                                 slot_live=slot_live)
         new_prefix_caches.append(c)
         infos.append(_trim_info(info, trace))
 
     def body(x, sliced):
-        p_slices, c_slices = sliced
+        p_slices, c_slices, s_slices = sliced
         step_infos = []
         new_cs = []
         for p, kinds in enumerate(period_pat):
@@ -131,7 +147,10 @@ def apply_model(params, tokens, cfg: ModelConfig, *, positions=None,
             x, c, info = apply_block(p_slices[p], x, cfg, kinds,
                                      positions=positions, cache=c,
                                      cross_src=cross_src,
-                                     moe_capacity=moe_capacity)
+                                     moe_capacity=moe_capacity,
+                                     slots=s_slices[p],
+                                     slot_fetch=slot_fetch,
+                                     slot_live=slot_live)
             x = hint(x, "batch", "res_seq", "embed")
             new_cs.append(c)
             step_infos.append(_trim_info(info, trace))
@@ -141,7 +160,7 @@ def apply_model(params, tokens, cfg: ModelConfig, *, positions=None,
         body = jax.checkpoint(body)
 
     scan_caches = caches["scan"] if caches is not None else None
-    xs = (params["scan"], scan_caches)
+    xs = (params["scan"], scan_caches, slots_scan)
     x, (new_scan_caches, scan_infos) = jax.lax.scan(body, x, xs)
     infos.append(scan_infos)
 

@@ -133,6 +133,27 @@ def expert_ffn_dense(params, xe, cfg: ModelConfig, counts=None):
     return jnp.einsum("ecf,efd->ecd", h, params["down"])
 
 
+def _grouped_ffn_rows(xf, wg, wu, wd, cfg: ModelConfig):
+    """Per-(token, k) SwiGLU over gathered weight slices: xf (T, d),
+    wg/wu (T·K, d, f), wd (T·K, f, d) -> ys (T·K, d).  The single
+    contraction body shared by the full-resident sparse path and the
+    slot-pool path — byte-identical weight rows therefore produce
+    bit-identical outputs whichever store they were gathered from."""
+    K = wg.shape[0] // xf.shape[0]
+    xs = jnp.repeat(xf, K, axis=0)                 # (T*K, d)
+    act = _ACTS[cfg.act]
+    h = act(jnp.einsum("td,tdf->tf", xs, wg)) \
+        * jnp.einsum("td,tdf->tf", xs, wu)
+    return jnp.einsum("tf,tfd->td", h, wd)         # (T*K, d)
+
+
+def _combine_topk(ys, gates):
+    """Weighted sum of per-(token, k) rows back to (T, d)."""
+    T, K = gates.shape
+    return jnp.sum(ys.reshape(T, K, -1)
+                   * gates.astype(ys.dtype)[..., None], axis=1)
+
+
 def grouped_expert_ffn(params, xf, idx, gates, cfg: ModelConfig):
     """Sparse decode fast path: per-(token, k) gathered-weight SwiGLU.
 
@@ -142,19 +163,75 @@ def grouped_expert_ffn(params, xf, idx, gates, cfg: ModelConfig):
     its expert).  Cost scales with the actual activated workload T·K
     instead of the dense E·C sweep.  xf (T, d), idx/gates (T, K) ->
     combined output (T, d)."""
+    flat_e = idx.reshape(-1)                       # (T*K,) activated experts
+    ys = _grouped_ffn_rows(xf, params["gate"][flat_e], params["up"][flat_e],
+                           params["down"][flat_e], cfg)
+    return _combine_topk(ys, gates)
+
+
+def slot_expert_ffn(slots, slot_fetch, xf, idx, gates, cfg: ModelConfig,
+                    live=None):
+    """Physical-offload decode path: weights come from the device slot
+    pool instead of a full (E, ...) stack (serving/expert_store.py).
+
+    ``slots`` is one layer's slot view: gate/up (n_slots, d, f), down
+    (n_slots, f, d), slot_of (E,) int32 expert->slot (-1 = not pooled),
+    lid () int32 layer id.  Pooled experts gather their slot rows;
+    misses fall back to the host tier via ``slot_fetch`` (an ExpertStore)
+    under ``lax.cond`` so fully-resident steps never leave the device:
+
+      * fallback "fetch" — missing experts' weights stream from the host
+        store (pure_callback H2D) and the FFN stays on device, so the
+        output is bit-identical to the full-resident gather;
+      * fallback "host" — missing rows' FFN executes on the host (CPU
+        tier) and only (d,)-sized outputs cross back.
+
+    ``live`` (T,) bool marks real tokens (continuous batching: live batch
+    slots).  Dead rows never count as misses — a retired slot's garbage
+    token must not trigger host round trips for experts the policy (which
+    sees only masked workloads) will never cache; its output rows are
+    computed from whatever pool row the clipped gather lands on and are
+    discarded by the server anyway.
+    """
     T, d = xf.shape
     K = idx.shape[1]
-    flat_e = idx.reshape(-1)                       # (T*K,) activated experts
-    wg = params["gate"][flat_e]                    # (T*K, d, f) weight slices
-    wu = params["up"][flat_e]
-    wd = params["down"][flat_e]
-    xs = jnp.repeat(xf, K, axis=0)                 # (T*K, d)
-    act = _ACTS[cfg.act]
-    h = act(jnp.einsum("td,tdf->tf", xs, wg)) \
-        * jnp.einsum("td,tdf->tf", xs, wu)
-    ys = jnp.einsum("tf,tfd->td", h, wd)           # (T*K, d)
-    return jnp.sum(ys.reshape(T, K, d)
-                   * gates.astype(ys.dtype)[..., None], axis=1)
+    flat_e = idx.reshape(-1)                       # (T*K,)
+    slot = slots["slot_of"][flat_e]
+    hit = slot >= 0
+    if live is not None:
+        hit = hit | ~jnp.repeat(live, K)
+    srow = jnp.clip(slot, 0)
+    wg = slots["gate"][srow]                       # (T*K, d, f)
+    wu = slots["up"][srow]
+    wd = slots["down"][srow]
+    any_miss = jnp.any(~hit)
+    if slot_fetch.fallback == "host":
+        hm = hit[:, None]
+        ys = _grouped_ffn_rows(xf, jnp.where(hit[:, None, None], wg, 0),
+                               jnp.where(hit[:, None, None], wu, 0),
+                               jnp.where(hit[:, None, None], wd, 0), cfg)
+        shape = jax.ShapeDtypeStruct(ys.shape, ys.dtype)
+        ys_host = jax.lax.cond(
+            any_miss,
+            lambda a: jax.pure_callback(slot_fetch.host_ffn_cb, shape, *a),
+            lambda a: jnp.zeros(ys.shape, ys.dtype),
+            (slots["lid"], xf, flat_e, hit))
+        ys = jnp.where(hm, ys, ys_host)
+    else:                                          # "fetch"
+        shapes = (jax.ShapeDtypeStruct(wg.shape, wg.dtype),
+                  jax.ShapeDtypeStruct(wu.shape, wu.dtype),
+                  jax.ShapeDtypeStruct(wd.shape, wd.dtype))
+        mg, mu, md = jax.lax.cond(
+            any_miss,
+            lambda a: jax.pure_callback(slot_fetch.fetch_weights_cb,
+                                        shapes, *a),
+            lambda a: tuple(jnp.zeros(s.shape, s.dtype) for s in shapes),
+            (slots["lid"], flat_e, hit))
+        hw = hit[:, None, None]
+        ys = _grouped_ffn_rows(xf, jnp.where(hw, wg, mg),
+                               jnp.where(hw, wu, mu),
+                               jnp.where(hw, wd, md), cfg)
+    return _combine_topk(ys, gates)
 
 
 # token-chunked execution: data-dependent dispatch gathers make GSPMD
@@ -208,7 +285,8 @@ def local_dispatch(xf, idx, E, K, C, valid_rep=None):
 
 def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None,
               valid=None, force_path: Optional[str] = None,
-              force_exchange: Optional[str] = None):
+              force_exchange: Optional[str] = None,
+              slots=None, slot_fetch=None, slot_live=None):
     """Returns (y, info) where info carries DALI's routing observables.
 
     ``valid`` (T,) bool marks real tokens (None = all real): padded tokens
@@ -219,7 +297,11 @@ def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None,
     and benchmarks; by default ``use_sparse_path`` selects statically from
     shapes.  ``force_exchange`` pins the expert-parallel exchange flavor
     ("dense" | "ragged", see moe_ep.apply_moe_ep) and only matters when
-    the EP path is taken."""
+    the EP path is taken.  ``slots`` + ``slot_fetch`` (an ExpertStore)
+    select the physical-offload slot-pool path — decode-sized inputs
+    only; ``slot_live`` (T,) bool keeps dead batch slots from triggering
+    miss fallbacks; routing/workload observables stay identical to the
+    other paths (DESIGN.md §8)."""
     from repro.launch.sharding import hint
     from repro.models.moe_ep import apply_moe_ep, ep_applicable
     if force_path not in (None, "dense", "sparse"):
@@ -228,11 +310,15 @@ def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None,
     m = cfg.moe
     B, S, d = x.shape
     T_all = B * S
-    if force_path is None and valid is None and ep_applicable(cfg, B, S):
+    if (slots is None and force_path is None and valid is None
+            and ep_applicable(cfg, B, S)):
         # production path under an active mesh: shard_map expert-parallel
         # all-to-all dispatch (see moe_ep.py / EXPERIMENTS.md §Perf)
         return apply_moe_ep(params, x, cfg, capacity=capacity,
                             force_exchange=force_exchange)
+    if slots is not None and T_all > MOE_CHUNK_TOKENS:
+        raise ValueError("the slot-pool path serves decode-sized steps; "
+                         f"{T_all} tokens exceed MOE_CHUNK_TOKENS")
     if T_all > MOE_CHUNK_TOKENS:
         n_chunks = -(-T_all // MOE_CHUNK_TOKENS)
         T_pad = n_chunks * MOE_CHUNK_TOKENS
@@ -280,11 +366,18 @@ def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None,
     gates, idx, probs, logits = route(params, xf, m)
     vrep = None if valid is None else jnp.repeat(valid, K)      # (T*K,)
 
-    sparse = (force_path == "sparse" if force_path is not None
-              else use_sparse_path(m, T, capacity))
+    sparse = (slots is not None
+              or (force_path == "sparse" if force_path is not None
+                  else use_sparse_path(m, T, capacity)))
     if sparse:
         # ---- decode fast path: gathered grouped SwiGLU ------------------
-        y = grouped_expert_ffn(params, xf, idx, gates, cfg)
+        if slots is not None:
+            # physical offload: weights from the device slot pool, misses
+            # from the host tier (serving/expert_store.py)
+            y = slot_expert_ffn(slots, slot_fetch, xf, idx, gates, cfg,
+                                live=slot_live)
+        else:
+            y = grouped_expert_ffn(params, xf, idx, gates, cfg)
         counts = _workload_counts(idx.reshape(-1), E, vrep)
         if valid is not None:
             y = jnp.where(valid[:, None], y, 0)

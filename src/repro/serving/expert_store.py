@@ -1,0 +1,557 @@
+"""Physical expert residency: host weight store + device slot pool.
+
+Until this module existed the offload was *modeled* — every expert's
+weights sat in device memory and the OffloadPolicy's ``resident`` /
+``prefetch_set`` decisions fed telemetry only (DESIGN.md §2).  The
+:class:`ExpertStore` makes the paper's memory layout real:
+
+  * **Host store** — the routed experts' gate/up/down stacks are pulled
+    out of ``params`` into host (numpy) arrays ``(L, E, ...)``; the
+    device never needs to hold them all.
+  * **Device slot pool** — fixed-size pools ``(L, n_slots, ...)`` per
+    matrix plus a slot table ``cur (L, n_slots) int32`` (expert id per
+    slot, -1 = free).  ``n_slots`` defaults to ``cache_size +
+    prefetch_size`` — exactly the policy's maximum effective resident
+    set ``cache ∪ prefetch``.
+  * **Slot plan lowering** — a policy step's decisions (the effective
+    resident set it wants on device next) are lowered to a bounded
+    evict-slot → insert-expert plan.  ``lower_slot_plan`` is the
+    jit-compatible lowering (vmapped over layers, used by the parity
+    tests and available in-graph); ``lower_slot_plan_np`` is the NumPy
+    mirror the serving loop actually drives — planning on the host
+    mirror of the slot table keeps the tiny plan math off the device
+    execution queue, where it would serialize behind the in-flight
+    decode step (DESIGN.md §8).  Both produce identical plans
+    (tests/test_expert_store.py).
+  * **Double-buffered streaming** — the store keeps TWO pool
+    generations and ping-pongs between them, split into two halves the
+    serving loop schedules around the in-flight decode:
+
+      - ``stage(target)`` — plan, gather the insert rows from the host
+        store into a workload-sized staging buffer (rows bucketed to
+        powers of two so the scatter compiles O(log) times) and issue
+        the host→device copy.  Pure host work + transfer, nothing on
+        the device execution queue — the overlap mode calls it right
+        after dispatching a decode step, so the copy hides behind the
+        step's compute.
+      - ``commit(off)`` — scatter the staged rows IN PLACE into the
+        spare generation (buffer donation: XLA aliases the donated
+        pool, so the scatter costs O(rows), not a pool copy) and swap
+        generations.  Donation makes the dispatch wait for in-flight
+        work, so commit runs at the step boundary, when the queue is
+        idle (right after the loop's token sync).  The spare's last
+        reader was the decode step one full sync ago, which makes the
+        in-place write race-free; because the spare is one plan behind,
+        each commit re-applies the previous plan's rows (deduped
+        against the new plan) before its own.
+
+    ``step_update`` = stage + commit back-to-back — the ``--offload
+    blocking`` baseline, which keeps the whole copy on the decode
+    critical path and thereby measures exactly what overlap hides.
+
+    Ownership note: the ``state["offload"]`` pytree is owned by the
+    store between updates — after ``commit`` returns, the PREVIOUS
+    generation's arrays become the spare and are donated (invalidated)
+    at the next commit; callers must not stash old offload states.
+
+Misses — experts a step activates that are not pooled — fall back to the
+host tier:
+
+  * ``fallback="fetch"`` (default): the missing experts' weights are
+    demand-fetched from the host store via ``jax.pure_callback`` (a real
+    host→device transfer on the critical path, the cost the paper's
+    Eq. 5 charges for non-resident GPU execution) and the FFN computes
+    on device — bit-identical to full-resident decode.
+  * ``fallback="host"``: the missing (token, expert) slots' FFN runs on
+    the host (numpy) and only the (d,)-sized outputs cross the link —
+    the paper's CPU execution tier.  Host BLAS and XLA round
+    differently, so this mode is allclose- rather than bit-tested.
+
+Both callbacks sit under ``lax.cond(any_miss, ...)`` so a fully-resident
+step never pays a host round trip.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, scan_pattern
+
+
+FALLBACKS = ("fetch", "host")
+
+
+def _np_act(name: str):
+    """NumPy activations matching models.layers._ACTS (jax.nn defaults:
+    gelu is the tanh approximation)."""
+    if name == "silu":
+        return lambda x: x / (1.0 + np.exp(-x))
+    if name == "gelu":
+        c = np.sqrt(2.0 / np.pi).astype(np.float32)
+        return lambda x: 0.5 * x * (1.0 + np.tanh(c * (x + 0.044715 * x**3)))
+    if name == "relu":
+        return lambda x: np.maximum(x, 0.0)
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def _next_pow2(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+def moe_layer_layout(cfg: ModelConfig):
+    """(prefix_moe_blocks, scan_moe_positions, n_super): which prefix
+    blocks / scan pattern positions are MoE, in the canonical layer order
+    every (L, ...) stack in this repo uses (prefix first, then scan
+    super-block-major — see models.model.collect_field)."""
+    prefix_pat, period_pat, n_super = scan_pattern(cfg)
+    prefix_moe = [i for i, (_, mlp) in enumerate(prefix_pat) if mlp == "moe"]
+    scan_moe = [p for p, (_, mlp) in enumerate(period_pat) if mlp == "moe"]
+    return prefix_moe, scan_moe, n_super
+
+
+# --------------------------------------------------------------------------
+# Slot-plan lowering (JAX + NumPy mirrors)
+# --------------------------------------------------------------------------
+
+_BIG = np.int32(1 << 30)
+
+
+def lower_slot_plan(cur, target, max_moves: int):
+    """Lower a per-layer target resident set to a bounded slot plan.
+
+    cur (L, S) int32 — expert id per slot (-1 free); target (L, E) bool —
+    the experts the policy wants pooled.  Returns ``(new_cur, ins_experts,
+    ins_slots, valid)`` with plan arrays (L, max_moves): up to
+    ``max_moves`` inserts per layer, each pairing a wanted-but-missing
+    expert (ascending id) with an available slot — free slots first, then
+    slots whose expert fell out of the target (ascending slot id).
+    Experts evicted from the target but not overwritten stay physically
+    pooled (free extra hits until their slot is reused).  Jit-compatible;
+    ``lower_slot_plan_np`` mirrors it plan-for-plan."""
+    S = cur.shape[1]
+    E = target.shape[1]
+    M = max_moves
+
+    def layer(c, want):
+        pooled = jnp.zeros((E + 1,), bool).at[jnp.where(c >= 0, c, E)].set(
+            True)[:E]
+        # available slots: free first (key = slot), then evictable
+        # (key = S + slot); kept-resident slots are unavailable
+        keep = jnp.where(c >= 0, want[jnp.clip(c, 0)], False)
+        skey = jnp.where(keep, _BIG,
+                         jnp.where(c < 0, jnp.arange(S),
+                                   S + jnp.arange(S))).astype(jnp.int32)
+        sorder = jnp.argsort(skey)
+        slots = sorder[:M]
+        s_ok = skey[slots] < _BIG
+        # wanted-but-missing experts, ascending id
+        ekey = jnp.where(want & ~pooled, jnp.arange(E), _BIG).astype(
+            jnp.int32)
+        eorder = jnp.argsort(ekey)
+        exps = eorder[:M]
+        e_ok = ekey[exps] < _BIG
+        valid = s_ok & e_ok
+        ins_e = jnp.where(valid, exps, -1).astype(jnp.int32)
+        ins_s = jnp.where(valid, slots, S).astype(jnp.int32)  # S = dropped
+        new_c = c.at[ins_s].set(ins_e, mode="drop")
+        return new_c, ins_e, ins_s, valid
+
+    return jax.vmap(layer)(cur, target)
+
+
+def lower_slot_plan_np(cur, target, max_moves: int):
+    """NumPy mirror of ``lower_slot_plan`` (identical plans; the serving
+    loop plans here so the host never waits on the device queue)."""
+    cur = np.asarray(cur)
+    target = np.asarray(target, bool)
+    L, S = cur.shape
+    M = max_moves
+    new_cur = cur.copy()
+    ins_e = np.full((L, M), -1, np.int32)
+    ins_s = np.full((L, M), S, np.int32)
+    valid = np.zeros((L, M), bool)
+    for l in range(L):
+        c = cur[l]
+        want = target[l]
+        pooled = np.zeros(target.shape[1], bool)
+        pooled[c[c >= 0]] = True
+        free = np.where(c < 0)[0]
+        evict = np.where((c >= 0) & ~want[np.clip(c, 0, None)])[0]
+        slots = np.concatenate([free, evict])[:M]
+        exps = np.where(want & ~pooled)[0][:M]
+        n = min(len(slots), len(exps), M)
+        ins_e[l, :n] = exps[:n]
+        ins_s[l, :n] = slots[:n]
+        valid[l, :n] = True
+        new_cur[l, slots[:n]] = exps[:n]
+    return new_cur, ins_e, ins_s, valid
+
+
+# --------------------------------------------------------------------------
+# The store
+# --------------------------------------------------------------------------
+
+class ExpertStore:
+    """Host expert weights + device slot pool for one model's MoE layers.
+
+    Construct once per server/benchmark run; ``init_device_state`` seeds
+    the pool from a policy's initial resident set and returns the
+    ``state["offload"]`` pytree (``{"gate","up","down","cur"}``) the
+    slot-indexed decode step consumes via ``build_view``.  The store
+    keeps a host mirror of the slot table (``_cur``) so planning never
+    reads the device; ``step_update`` keeps mirror and device table in
+    lockstep (both apply the same deterministic plan)."""
+
+    def __init__(self, params, cfg: ModelConfig, n_slots: int,
+                 max_moves: int = 4, fallback: str = "fetch"):
+        if cfg.moe is None:
+            raise ValueError("ExpertStore needs an MoE architecture")
+        if fallback not in FALLBACKS:
+            raise ValueError(f"fallback must be one of "
+                             f"{'|'.join(FALLBACKS)}, got {fallback!r}")
+        self.cfg = cfg
+        m = cfg.moe
+        self.E = m.n_routed
+        self.d = cfg.d_model
+        self.f = m.d_expert or cfg.d_ff
+        self.n_slots = n_slots
+        self.max_moves = max_moves
+        self.fallback = fallback
+        self._act = _np_act(cfg.act)
+
+        prefix_moe, scan_moe, n_super = moe_layer_layout(cfg)
+        self._prefix_moe = prefix_moe
+        self._scan_moe = scan_moe
+        self._n_super = n_super
+        self.n_layers = len(prefix_moe) + n_super * len(scan_moe)
+
+        # host store: (L, E, ...) per matrix, canonical layer order
+        def stack(name):
+            rows = [np.asarray(params["prefix"][i]["mlp"][name])
+                    for i in prefix_moe]
+            per_pos = [np.asarray(params["scan"][p]["mlp"][name])
+                       for p in scan_moe]                 # (n_super, E, ..)
+            if per_pos:
+                s = np.stack(per_pos, axis=1)             # (n_super, P, ..)
+                rows.extend(s.reshape((-1,) + s.shape[2:]))
+            return np.stack(rows)
+
+        self.host = {k: stack(k) for k in ("gate", "up", "down")}
+        self.dtype = self.host["gate"].dtype
+        if self.n_slots > self.E:
+            raise ValueError(f"n_slots={n_slots} exceeds n_experts={self.E}")
+        self.expert_bytes = int(sum(self.host[k][0, 0].nbytes
+                                    for k in self.host))
+        # telemetry (host-side, best-effort under callback caching)
+        self.fallback_rows = 0            # (token, k) slots served by misses
+        self.fallback_fetches = 0         # experts demand-fetched
+        self.h2d_rows = 0                 # experts streamed into the pool
+        self.h2d_bytes = 0
+        self._cur = np.full((self.n_layers, n_slots), -1, np.int32)
+        # ping-pong generation state: the spare pool buffers (donated in
+        # place by the next step_update) and the plan rows the spare is
+        # missing relative to the logical pool state (an (n, 3) int32 of
+        # (layer, slot, expert) — re-applied, deduped, at the next swap)
+        self._spare = None
+        self._spare_lag = np.zeros((0, 3), np.int32)
+        self._staged = None                   # device staging of next plan
+        self._staged_rows = None
+        # donate the pool + slot-table args: the scatter aliases them in
+        # place (O(rows), not a pool copy) — safe because the spare's
+        # last reader retired a full step ago (see module docstring)
+        self._apply_jit = jax.jit(self._apply, donate_argnums=(0, 1, 2, 3))
+
+    # -- device state ------------------------------------------------------
+
+    def init_device_state(self, resident):
+        """Seed the pool from an initial (L, E) bool resident set (the
+        policy's random initial cache) and return ``state["offload"]``."""
+        resident = np.asarray(resident, bool)
+        L, S = self.n_layers, self.n_slots
+        assert resident.shape == (L, self.E), resident.shape
+        cur = np.full((L, S), -1, np.int32)
+        pools = {k: np.zeros((L, S) + self.host[k].shape[2:], self.dtype)
+                 for k in self.host}
+        for l in range(L):
+            ids = np.where(resident[l])[0]
+            if len(ids) > S:
+                raise ValueError(
+                    f"layer {l}: {len(ids)} initial residents exceed "
+                    f"n_slots={S} (size the pool to cache+prefetch)")
+            cur[l, :len(ids)] = ids
+            for k in pools:
+                pools[k][l, :len(ids)] = self.host[k][l, ids]
+        self._cur = cur.copy()
+        off = {k: jax.device_put(v) for k, v in pools.items()}
+        off["cur"] = jax.device_put(cur)
+        # second generation for the streaming ping-pong (same contents)
+        self._spare = {k: jax.device_put(v) for k, v in pools.items()}
+        self._spare["cur"] = jax.device_put(cur)
+        self._spare_lag = np.zeros((0, 3), np.int32)
+        self._staged = None
+        self._staged_rows = None
+        return off
+
+    # -- the slot-indexed view the model consumes --------------------------
+
+    def build_view(self, off):
+        """params-shaped per-layer slot view for ``apply_model``:
+        ``{"prefix": (...), "scan": (...)}`` with per-MoE-layer entries
+        ``{"gate","up","down","slot_of","lid"}`` (scan entries carry a
+        leading n_super axis and ride the scan's xs exactly like caches).
+        Traced-friendly — called inside the jitted decode step."""
+        E, S = self.E, self.n_slots
+        cur = off["cur"]                                       # (L, S)
+
+        def invert(c):
+            idx = jnp.where(c >= 0, c, E)
+            return jnp.full((E + 1,), -1, jnp.int32).at[idx].set(
+                jnp.arange(S, dtype=jnp.int32))[:E]
+
+        slot_of = jax.vmap(invert)(cur)                        # (L, E)
+        n_pre = len(self._prefix_moe)
+        prefix_pat, period_pat, _ = scan_pattern(self.cfg)
+
+        prefix = [None] * len(prefix_pat)
+        for l, i in enumerate(self._prefix_moe):
+            prefix[i] = {"gate": off["gate"][l], "up": off["up"][l],
+                         "down": off["down"][l], "slot_of": slot_of[l],
+                         "lid": jnp.asarray(l, jnp.int32)}
+
+        scan = [None] * len(period_pat)
+        P = len(self._scan_moe)
+        if P:
+            def per_pos(a, j):
+                r = a[n_pre:].reshape((self._n_super, P) + a.shape[1:])
+                return r[:, j]
+            for j, p in enumerate(self._scan_moe):
+                lids = n_pre + np.arange(self._n_super) * P + j
+                scan[p] = {"gate": per_pos(off["gate"], j),
+                           "up": per_pos(off["up"], j),
+                           "down": per_pos(off["down"], j),
+                           "slot_of": per_pos(slot_of, j),
+                           "lid": jnp.asarray(lids, jnp.int32)}
+        return {"prefix": tuple(prefix), "scan": tuple(scan)}
+
+    # -- miss fallbacks (host callbacks, see module docstring) -------------
+
+    def fetch_weights_cb(self, lid, flat_e, hit):
+        """pure_callback target: demand-fetch missing experts' weights.
+        Returns (T·K, d, f)/(T·K, f, d) stacks with miss rows filled from
+        the host store (hit rows are zeros — the caller keeps its pool
+        gather for those)."""
+        l = int(lid)
+        e = np.asarray(flat_e)
+        miss = ~np.asarray(hit)
+        rows = np.nonzero(miss)[0]
+        g = np.zeros((e.shape[0], self.d, self.f), self.dtype)
+        u = np.zeros_like(g)
+        dn = np.zeros((e.shape[0], self.f, self.d), self.dtype)
+        g[rows] = self.host["gate"][l, e[rows]]
+        u[rows] = self.host["up"][l, e[rows]]
+        dn[rows] = self.host["down"][l, e[rows]]
+        self.fallback_rows += len(rows)
+        self.fallback_fetches += len(set(e[rows].tolist()))
+        return g, u, dn
+
+    def host_ffn_cb(self, lid, xf, flat_e, hit):
+        """pure_callback target: run missing (token, k) slots' expert FFN
+        on the host (numpy, float32) — the CPU execution tier.  Returns
+        (T·K, d) with miss rows filled, hit rows zero."""
+        l = int(lid)
+        xf = np.asarray(xf)
+        e = np.asarray(flat_e)
+        K = e.shape[0] // xf.shape[0]
+        ys = np.zeros((e.shape[0], self.d), xf.dtype)
+        rows = np.nonzero(~np.asarray(hit))[0]
+        for r in rows:
+            x = xf[r // K].astype(np.float32)
+            wg = self.host["gate"][l, e[r]].astype(np.float32)
+            wu = self.host["up"][l, e[r]].astype(np.float32)
+            wd = self.host["down"][l, e[r]].astype(np.float32)
+            ys[r] = ((self._act(x @ wg) * (x @ wu)) @ wd).astype(ys.dtype)
+        self.fallback_rows += len(rows)
+        return ys
+
+    # -- streaming updates -------------------------------------------------
+
+    @staticmethod
+    def _apply(pool_g, pool_u, pool_d, cur, sg, su, sd, lay, slot, exp, ok):
+        """Scatter staged expert rows into the pool (functional: returns
+        new pool arrays — the previous generation stays readable by any
+        in-flight decode step, which is what makes overlap safe)."""
+        S = cur.shape[1]
+        slot_eff = jnp.where(ok, slot, S)              # OOB rows dropped
+        pool_g = pool_g.at[lay, slot_eff].set(sg, mode="drop")
+        pool_u = pool_u.at[lay, slot_eff].set(su, mode="drop")
+        pool_d = pool_d.at[lay, slot_eff].set(sd, mode="drop")
+        cur = cur.at[lay, slot_eff].set(exp, mode="drop")
+        return pool_g, pool_u, pool_d, cur
+
+    def plan(self, target):
+        """Lower a (L, E) bool target against the HOST slot-table mirror
+        (NumPy twin; the in-graph ``lower_slot_plan`` is parity-tested
+        against it).  Does NOT mutate the mirror — ``step_update`` does,
+        once the plan is actually issued."""
+        return lower_slot_plan_np(self._cur, target, self.max_moves)
+
+    def stage(self, target) -> bool:
+        """Plan one step's pool update toward ``target`` (L, E) bool (the
+        policy's cache ∪ prefetch for the next step) and issue the
+        host→device copy of the staged rows — the planned inserts plus
+        the rows the spare generation still lags by, deduped (the new
+        plan wins on a (layer, slot) collision), bucketed to the next
+        power of two (→ O(log) scatter compilations).
+
+        This is the half the overlap mode hides behind the in-flight
+        decode step: pure host work + the H2D transfer, no device-queue
+        entry.  Returns False when the pool is already at target.  The
+        staged rows are folded into the pool by the next ``commit``
+        (guaranteed to run before the next ``stage``)."""
+        if self._staged is not None:
+            # a second stage would advance the host mirror past what ever
+            # reaches the device — a silent permanent mirror/pool split
+            raise RuntimeError("stage() called twice without commit()")
+        new_cur, ins_e, ins_s, valid = self.plan(target)
+        lay_v, mv = np.nonzero(valid)
+        n = len(lay_v)
+        if n == 0:
+            return False                     # pool already at target
+        rows = np.stack([lay_v, ins_s[lay_v, mv], ins_e[lay_v, mv]],
+                        axis=1).astype(np.int32)
+        # rows the spare lags by, minus (layer, slot) pairs this plan
+        # overwrites anyway
+        if len(self._spare_lag):
+            key_new = set(map(tuple, rows[:, :2].tolist()))
+            keep = [r for r in self._spare_lag
+                    if (int(r[0]), int(r[1])) not in key_new]
+            combined = np.concatenate(
+                [np.asarray(keep, np.int32).reshape(-1, 3), rows])
+        else:
+            combined = rows
+        m = len(combined)
+        R = _next_pow2(m)
+        lay = np.zeros(R, np.int32)
+        slot = np.full(R, self.n_slots, np.int32)
+        exp = np.zeros(R, np.int32)
+        ok = np.zeros(R, bool)
+        lay[:m], slot[:m], exp[:m] = combined.T
+        ok[:m] = True
+        # staged rows gathered in one shot (pad rows gather garbage from
+        # (0, 0) and are dropped by the scatter)
+        sg = self.host["gate"][lay, exp]
+        su = self.host["up"][lay, exp]
+        sd = self.host["down"][lay, exp]
+        self._staged = jax.device_put((sg, su, sd, lay, slot, exp, ok))
+        self._staged_rows = rows
+        self._cur = new_cur
+        self.h2d_rows += n
+        # actual bus traffic: the full staged buffer crosses the link —
+        # new rows, spare-lag re-applies AND the pow2 padding rows
+        self.h2d_bytes += R * self.expert_bytes
+        return True
+
+    def commit(self, off, blocking: bool = False):
+        """Fold the staged rows into the spare pool generation (donated,
+        in-place scatter — O(rows), no pool copy) and return it as the
+        next ``state["offload"]``; the generation passed in becomes the
+        new spare.  No-op when nothing is staged.
+
+        MUST be dispatched while the device queue is idle (the serving
+        loops call it right after the per-step token sync): donation
+        makes the dispatch wait for any in-flight execution, which would
+        serialize exactly the work overlap wants to hide.  The donated
+        spare's last reader was the decode step one full sync ago, so
+        the in-place write cannot race."""
+        if self._staged is None:
+            return off
+        spare = self._spare
+        pool_g, pool_u, pool_d, cur = self._apply_jit(
+            spare["gate"], spare["up"], spare["down"], spare["cur"],
+            *self._staged)
+        # the generation the caller was decoding against becomes the new
+        # spare; it lags by exactly the plan just applied
+        self._spare = {"gate": off["gate"], "up": off["up"],
+                       "down": off["down"], "cur": off["cur"]}
+        self._spare_lag = self._staged_rows
+        self._staged = None
+        self._staged_rows = None
+        new_off = dict(off, gate=pool_g, up=pool_u, down=pool_d, cur=cur)
+        if blocking:
+            jax.block_until_ready(new_off)
+        return new_off
+
+    def step_update(self, off, target, blocking: bool = False):
+        """stage + commit in one call — the blocking mode's critical-path
+        update (and the convenience entry tests use).  The overlap mode
+        splits the halves instead: ``stage`` behind the in-flight decode,
+        ``commit`` at the next idle point."""
+        if not self.stage(target):
+            return off
+        return self.commit(off, blocking=blocking)
+
+    # -- serving-loop orchestration ----------------------------------------
+    # ONE copy of the ordering-critical per-step protocol (commit must
+    # precede the decode dispatch, stage must follow it, the target must
+    # be read after the token sync) — both servers, the streaming
+    # benchmark and the example drive these three hooks.
+
+    def pre_step(self, off, mode: str, target):
+        """Before the decode dispatch: "blocking" → stage + commit +
+        wait (the whole copy on the critical path); "overlap" → commit
+        the previously staged rows (the device queue is idle at the step
+        boundary, so the donated in-place scatter dispatches without
+        stalling)."""
+        if mode == "blocking":
+            if target is None:
+                return off
+            return self.step_update(off, target, blocking=True)
+        return self.commit(off)
+
+    def post_dispatch(self, mode: str, target):
+        """Right after the decode dispatch: in "overlap" mode, stage the
+        next plan — the H2D copy hides behind the in-flight step's
+        compute."""
+        if mode == "overlap" and target is not None:
+            self.stage(target)
+
+    @staticmethod
+    def next_target(state, tel):
+        """The next step's pool target — this step's cache ∪ prefetch
+        (tiny D2H; call after the step's token sync so it never blocks)."""
+        return (np.asarray(state["dali"]["resident"])
+                | np.asarray(tel["prefetched"]))
+
+    def stats(self) -> dict:
+        return {"h2d_rows": self.h2d_rows, "h2d_bytes": self.h2d_bytes,
+                "fallback_rows": self.fallback_rows,
+                "fallback_fetches": self.fallback_fetches,
+                "expert_bytes": self.expert_bytes,
+                "n_slots": self.n_slots, "n_layers": self.n_layers}
+
+
+def strip_expert_params(params, cfg: ModelConfig):
+    """Params with the routed experts' gate/up/down stacks REMOVED —
+    decode through the slot pool never reads them, so a physical-offload
+    server only keeps router/shared/attention weights on device (the
+    memory saving the paper's layout exists for).  Returns a new pytree;
+    the original is untouched."""
+    prefix_moe, scan_moe, _ = moe_layer_layout(cfg)
+
+    def strip_mlp(mlp):
+        return {k: v for k, v in mlp.items()
+                if k not in ("gate", "up", "down")}
+
+    out = dict(params)
+    out["prefix"] = tuple(
+        dict(b, mlp=strip_mlp(b["mlp"])) if i in prefix_moe else b
+        for i, b in enumerate(params["prefix"]))
+    out["scan"] = tuple(
+        dict(b, mlp=strip_mlp(b["mlp"])) if p in scan_moe else b
+        for p, b in enumerate(params["scan"]))
+    return out

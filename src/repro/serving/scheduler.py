@@ -21,10 +21,21 @@ so mixed-length traffic leaves throughput on the floor — kept as a stable
 baseline for tests, examples and the serving benchmark.
 
 Both servers take ``policy=`` — a registered offload-policy name
-("dali" | "static" | "all_gpu" | "lru" | "statistical" | "random" |
-"none") or an ``OffloadPolicy`` instance (core/policy.py); names are
-validated at construction.  Legacy ``dali_cfg``-only construction keeps
-meaning "dali".
+("dali" | "static" | "all_gpu" | "lru" | "score" | "statistical" |
+"random" | "none") or an ``OffloadPolicy`` instance (core/policy.py);
+names are validated at construction.  Legacy ``dali_cfg``-only
+construction keeps meaning "dali".
+
+Both servers also take ``offload=`` — "modeled" (default: every expert
+weight stays on device, the policy feeds telemetry only), "blocking" or
+"overlap" (physical offload: routed expert weights live in a host
+:class:`repro.serving.expert_store.ExpertStore` and decode reads a
+device slot pool; the policy's cache ∪ prefetch decisions are lowered to
+slot plans and streamed host→device between steps — "blocking" keeps the
+copies on the critical path, "overlap" issues them right after the
+decode dispatch so they hide behind the step's compute, DESIGN.md §8).
+Prefill still runs against the full on-device params (prefill offload is
+a ROADMAP item), so physical mode changes decode only.
 
 Telemetry is sync-free in both servers: the jitted DALI schedule folds
 per-step sums into a device-side accumulator and the aggregator drains it
@@ -49,10 +60,39 @@ import numpy as np
 from repro.core.engine import DaliConfig, TelemetryAggregator
 from repro.models.config import ModelConfig
 from repro.models.model import init_caches
+from repro.serving.expert_store import ExpertStore
 from repro.serving.steps import (init_serve_state, make_admit_prefill,
                                  make_admit_step, make_decode_step,
                                  make_prefill_step, resolve_policy,
                                  retire_slot)
+
+OFFLOAD_MODES = ("modeled", "blocking", "overlap")
+
+
+def make_store(offload: str, params, cfg, policy, fallback: str = "fetch"):
+    """Build the ExpertStore for a physical offload mode (None for
+    "modeled").  The pool is sized to the policy's maximum effective
+    resident set (cache ∪ prefetch) and the per-step copy budget to its
+    churn (prefetch + cache swaps)."""
+    if offload not in OFFLOAD_MODES:
+        raise ValueError(f"offload must be one of "
+                         f"{'|'.join(OFFLOAD_MODES)}, got {offload!r}")
+    if offload == "modeled":
+        return None
+    if not (policy.schedules and cfg.moe is not None):
+        raise ValueError("physical offload requires an MoE architecture "
+                         "and a scheduling policy (policy != 'none')")
+    dcfg = policy.dcfg
+    moves = max(2, dcfg.prefetch_size + dcfg.u_size)
+    # pool = max effective resident set (cache ∪ prefetch) + one plan of
+    # slack: in-flight inserts land in slack instead of evicting experts
+    # the lagged plan still wants, and evicted-but-not-overwritten
+    # experts keep serving hits until their slot is reused
+    return ExpertStore(
+        params, cfg,
+        n_slots=min(cfg.moe.n_routed,
+                    dcfg.cache_size + dcfg.prefetch_size + moves),
+        max_moves=moves, fallback=fallback)
 
 
 @dataclass
@@ -149,7 +189,8 @@ class ContinuousBatchServer:
     def __init__(self, params, cfg: ModelConfig, batch_size: int = 8,
                  max_len: int = 256, eos_id: int = 1,
                  dali_cfg: Optional[DaliConfig] = None, res_vecs=None,
-                 min_bucket: int = 16, policy=None):
+                 min_bucket: int = 16, policy=None,
+                 offload: str = "modeled"):
         from repro.models.config import layer_pattern
         if any(mixer == "mamba" for mixer, _ in layer_pattern(cfg)):
             # attention masks hide right-pad slots (pos = -1); a recurrent
@@ -165,12 +206,15 @@ class ContinuousBatchServer:
         self.dali_cfg = dali_cfg
         # validated here, at construction (registry names listed on error)
         self.policy = resolve_policy(policy, cfg, dali_cfg)
+        self.offload = offload
+        self.store = make_store(offload, params, cfg, self.policy)
         self.res_vecs = res_vecs
         self.min_bucket = min_bucket
         self.queue: deque[Request] = deque()
         self.metrics = ServeMetrics()
         self._prefill = jax.jit(make_admit_prefill(cfg))
-        self._decode = jax.jit(make_decode_step(cfg, policy=self.policy))
+        self._decode = jax.jit(make_decode_step(cfg, policy=self.policy,
+                                                offload=self.store))
         self._admit = jax.jit(make_admit_step(cfg))
         # rolling (sliding-window) caches keep the LAST S_c positions of a
         # prefill chunk; right-pad beyond the window would evict real prompt
@@ -220,8 +264,12 @@ class ContinuousBatchServer:
         B = self.batch
         finished: List[Request] = []
         state = init_serve_state(self.cfg, B, self.max_len,
-                                 policy=self.policy, per_slot=True)
+                                 policy=self.policy, per_slot=True,
+                                 offload=self.store)
         slot_req: List[Optional[Request]] = [None] * B
+        # physical offload: the previous step's cache ∪ prefetch decision,
+        # pending lowering to a slot plan (double-buffer lag of one step)
+        pool_target = None
 
         while self.queue or any(slot_req):
             now = time.perf_counter()
@@ -249,10 +297,20 @@ class ContinuousBatchServer:
                 continue
 
             # -- one decode step over the whole slot table -----------------
+            # (physical offload: the store's pre_step/post_dispatch/
+            # next_target hooks schedule the pool streaming around the
+            # dispatch — see expert_store.py, DESIGN.md §8)
             t0 = time.perf_counter()
-            state, _, _ = self._decode(self.params, state, self.res_vecs)
+            if self.store is not None:
+                state["offload"] = self.store.pre_step(
+                    state["offload"], self.offload, pool_target)
+            state, _, tel = self._decode(self.params, state, self.res_vecs)
+            if self.store is not None:
+                self.store.post_dispatch(self.offload, pool_target)
             toks = np.asarray(state["tokens"])[:, 0]
             t1 = time.perf_counter()
+            if self.store is not None:
+                pool_target = self.store.next_target(state, tel)
 
             # single per-slot "emitted this step" count: every live slot
             # contributes exactly one token (no re-derivation, no double
@@ -288,7 +346,8 @@ class BatchServer:
     def __init__(self, params, cfg: ModelConfig, batch_size: int = 8,
                  max_len: int = 256, eos_id: int = 1,
                  dali_cfg: Optional[DaliConfig] = None, res_vecs=None,
-                 min_bucket: int = 16, policy=None):
+                 min_bucket: int = 16, policy=None,
+                 offload: str = "modeled"):
         self.params = params
         self.cfg = cfg
         self.batch = batch_size
@@ -297,12 +356,15 @@ class BatchServer:
         self.dali_cfg = dali_cfg
         # validated here, at construction (registry names listed on error)
         self.policy = resolve_policy(policy, cfg, dali_cfg)
+        self.offload = offload
+        self.store = make_store(offload, params, cfg, self.policy)
         self.res_vecs = res_vecs
         self.min_bucket = min_bucket
         self.queue: deque[Request] = deque()
         self.metrics = ServeMetrics()
         self._prefill = jax.jit(make_prefill_step(cfg, max_len))
-        self._decode = jax.jit(make_decode_step(cfg, policy=self.policy))
+        self._decode = jax.jit(make_decode_step(cfg, policy=self.policy,
+                                                offload=self.store))
 
     def submit(self, req: Request):
         if not req.submitted_at:
@@ -340,8 +402,10 @@ class BatchServer:
         for i, r in enumerate(wave):
             prompts[i, S - len(r.prompt):] = r.prompt   # left-pad
 
+        # per-wave state re-init also re-seeds the slot pool (the fresh
+        # policy state draws a fresh random resident set)
         state = init_serve_state(self.cfg, B, self.max_len,
-                                 policy=self.policy)
+                                 policy=self.policy, offload=self.store)
         t0 = time.perf_counter()
         tok, caches = self._prefill(self.params, jnp.asarray(prompts),
                                     state["caches"])
@@ -365,6 +429,7 @@ class BatchServer:
                     live[i] = False
                     r.done_at = t_pf
         t0 = time.perf_counter()
+        pool_target = None
         for _ in range(min(budget, self.max_len - S - 1)):
             if not live.any():        # whole wave done at/after prefill
                 break
@@ -372,10 +437,17 @@ class BatchServer:
             # the top of the step emits exactly one token (the fix for the
             # old live.sum() + re-derived-final-token double count)
             emitted = int(live.sum())
-            state, logits, _ = self._decode(self.params, state,
-                                            self.res_vecs)
+            if self.store is not None:
+                state["offload"] = self.store.pre_step(
+                    state["offload"], self.offload, pool_target)
+            state, logits, tel = self._decode(self.params, state,
+                                              self.res_vecs)
+            if self.store is not None:
+                self.store.post_dispatch(self.offload, pool_target)
             toks = np.asarray(state["tokens"])[:, 0]
             t_step = time.perf_counter()
+            if self.store is not None:
+                pool_target = self.store.next_target(state, tel)
             for i, r in enumerate(wave):
                 if live[i]:
                     r.output.append(int(toks[i]))

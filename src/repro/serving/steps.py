@@ -2,8 +2,9 @@
 offload-policy scheduling for MoE architectures.
 
 Scheduling is pluggable: ``policy=`` accepts a registered policy name
-("dali" | "static" | "all_gpu" | "lru" | "statistical" | "random" |
-"none"), an :class:`repro.core.policy.OffloadPolicy` instance, or None
+("dali" | "static" | "all_gpu" | "lru" | "score" | "statistical" |
+"random" | "none"), an :class:`repro.core.policy.OffloadPolicy`
+instance, or None
 (legacy: "dali" when a DaliConfig is supplied, else off).  The policy's
 state rides in ``state["dali"]`` (key name kept for compat) and its
 ``step`` runs in-graph each decode step — swapping policies swaps pure
@@ -23,6 +24,8 @@ wave (shared position — the compat preset)::
     "pos":        ()     int32   — current position (synchronised batch)
     "caches":     model caches pytree
     "dali":       DALI scheduler state (MoE archs with engine enabled)
+    "offload":    device slot pools + slot table (physical offload only,
+                  see serving/expert_store.py)
     "rng":        PRNG key
   }
 
@@ -166,12 +169,19 @@ def retire_slot(state, slot: int):
 def make_decode_step(cfg: ModelConfig, dali_cfg: Optional[DaliConfig] = None,
                      moe_capacity: Optional[int] = None,
                      sample: bool = False, temperature: float = 1.0,
-                     policy=None):
+                     policy=None, offload=None):
     """Returns decode(params, state, res_vecs=None) -> (state', logits,
     telemetry).  ``policy`` (name, OffloadPolicy, or None — see
     ``resolve_policy``) selects the in-graph offloading scheduler; the
     legacy ``dali_cfg``-only call builds the "dali" policy (greedy
     assignment + residual prefetch + workload cache, paper §4).
+
+    ``offload`` (an :class:`repro.serving.expert_store.ExpertStore`)
+    switches MoE layers to the physical slot-pool path: expert weights
+    are read from ``state["offload"]`` device pools (gathered by slot
+    id), misses fall back to the store's host tier, and the serving loop
+    streams pool updates between steps (DESIGN.md §8).  Requires a
+    scheduling policy — the slot plans are lowered from its decisions.
 
     Works for both serve-state layouts: a scalar ``pos`` decodes the wave
     way (shared position); a per-slot ``pos`` (B,) uses per-row positions
@@ -179,6 +189,10 @@ def make_decode_step(cfg: ModelConfig, dali_cfg: Optional[DaliConfig] = None,
     ``state["active"]`` so the policy sees the actual per-step token mix."""
     policy = resolve_policy(policy, cfg, dali_cfg)
     use_policy = policy.schedules and cfg.moe is not None
+    if offload is not None and not use_policy:
+        raise ValueError("physical offload (offload=) requires an MoE "
+                         "architecture and a scheduling policy — its slot "
+                         "plans are lowered from the policy's decisions")
 
     def decode(params, state, res_vecs=None):
         per_slot = state["pos"].ndim == 1
@@ -188,10 +202,14 @@ def make_decode_step(cfg: ModelConfig, dali_cfg: Optional[DaliConfig] = None,
         else:
             positions = state["pos"] + jnp.arange(1, dtype=jnp.int32)
             active = None
+        slot_kw = {}
+        if offload is not None:
+            slot_kw = dict(expert_slots=offload.build_view(state["offload"]),
+                           slot_fetch=offload, slot_live=active)
         logits, caches, infos = apply_model(
             params, state["tokens"], cfg, positions=positions,
             caches=state["caches"], moe_capacity=moe_capacity,
-            trace=use_policy)
+            trace=use_policy, **slot_kw)
         if sample:
             rng, sub = jax.random.split(state["rng"])
             nxt = jax.random.categorical(
@@ -223,7 +241,7 @@ def make_decode_step(cfg: ModelConfig, dali_cfg: Optional[DaliConfig] = None,
 def init_serve_state(cfg: ModelConfig, batch: int, max_len: int,
                      dali_cfg: Optional[DaliConfig] = None,
                      dtype=None, n_cross: Optional[int] = None, seed: int = 0,
-                     per_slot: bool = False, policy=None):
+                     per_slot: bool = False, policy=None, offload=None):
     state = {
         "tokens": jnp.zeros((batch, 1), jnp.int32),
         "pos": (jnp.zeros((batch,), jnp.int32) if per_slot
@@ -237,6 +255,14 @@ def init_serve_state(cfg: ModelConfig, batch: int, max_len: int,
     policy = resolve_policy(policy, cfg, dali_cfg)
     if policy.schedules and cfg.moe is not None:
         state["dali"] = policy.init()
+    if offload is not None:
+        if "dali" not in state:
+            raise ValueError("physical offload requires a scheduling "
+                             "policy (its initial resident set seeds the "
+                             "slot pool)")
+        import numpy as np
+        state["offload"] = offload.init_device_state(
+            np.asarray(state["dali"]["resident"]))
     return state
 
 
