@@ -86,7 +86,7 @@ def link_bytes(cap: int, itemsize: int, tp: int, with_counts: bool) -> int:
 
 
 def bench_one(kind: str, dtype: str, B: int, S: int, reps: int,
-              mesh) -> Dict:
+              mesh, overlap: bool = True) -> Dict:
     cfg = make_cfg(dtype)
     dt = jnp.dtype(cfg.dtype)
     params = init_moe(jax.random.PRNGKey(0), cfg)
@@ -97,11 +97,20 @@ def bench_one(kind: str, dtype: str, B: int, S: int, reps: int,
     lmap = shd.logical_map_for(cfg, "prefill_32k", mesh)
     with mesh, shd.rules(mesh, lmap, "tp"):
         assert ep_applicable(cfg, B, S)
-        ragged = jax.jit(lambda p, x: apply_moe(p, x, cfg))
+        ragged = jax.jit(lambda p, x: apply_moe(p, x, cfg,
+                                                count_overlap=overlap))
         dense = jax.jit(lambda p, x: apply_moe(p, x, cfg,
                                                force_exchange="dense"))
         y_r, i_r = ragged(params, x)
         y_d, i_d = dense(params, x)
+        # the overlapped count exchange must be a pure scheduling change:
+        # same outputs, same shipped capacity (bit-identical, DESIGN.md §9)
+        other = jax.jit(lambda p, x: apply_moe(p, x, cfg,
+                                               count_overlap=not overlap))
+        y_o, i_o = other(params, x)
+        overlap_parity = (bool(np.array_equal(np.asarray(y_r),
+                                              np.asarray(y_o)))
+                          and int(i_r["ep_cx"]) == int(i_o["ep_cx"]))
         t_ragged = time_fn(lambda: ragged(params, x), reps=reps)
         t_dense = time_fn(lambda: dense(params, x), reps=reps)
     C, cx = int(i_d["ep_cx"]), int(i_r["ep_cx"])
@@ -115,6 +124,8 @@ def bench_one(kind: str, dtype: str, B: int, S: int, reps: int,
         "dense_link_bytes": d_bytes, "ragged_link_bytes": r_bytes,
         "byte_ratio": r_bytes / d_bytes,
         "dense_us": t_dense, "ragged_us": t_ragged,
+        "count_overlap": overlap,
+        "overlap_parity": overlap_parity,
         "parity_max_err": err, "atol": ATOL[dtype],
         "parity_ok": err < ATOL[dtype],
         "workload_equal": bool(np.array_equal(
@@ -127,6 +138,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="reduced shapes + reps for CI")
+    ap.add_argument("--overlap", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="hoist the count all_to_all ahead of the "
+                         "dispatch math (attention-overlapped count "
+                         "exchange, DESIGN.md §9); either way the "
+                         "opposite setting is parity-checked")
     ap.add_argument("--reps", type=int, default=0)
     ap.add_argument("--json", default=None,
                     help="output path (default reports/bench/"
@@ -144,7 +161,8 @@ def main():
     print("name,us_per_call,derived")
     for dtype in dtypes:
         for kind in ROUTINGS:
-            r = bench_one(kind, dtype, B, S, reps, mesh)
+            r = bench_one(kind, dtype, B, S, reps, mesh,
+                          overlap=args.overlap)
             rows.append(r)
             print(f"ep_exchange_dense_{kind}_{dtype},{r['dense_us']:.2f},"
                   f"C={r['C']}")
@@ -152,6 +170,7 @@ def main():
                   f"cx={r['cx']} bytes={100 * r['byte_ratio']:.0f}%")
             assert r["parity_ok"], (kind, dtype, r["parity_max_err"])
             assert r["workload_equal"] and r["dropped_equal"], (kind, dtype)
+            assert r["overlap_parity"], (kind, dtype)
 
     from benchmarks.report_md import ep_exchange_table
     print()
@@ -167,6 +186,7 @@ def main():
         json.dump({"backend": jax.default_backend(), "tp": 8,
                    "E": E, "top_k": K, "d_model": D_MODEL,
                    "d_expert": D_EXPERT, "smoke": bool(args.smoke),
+                   "count_overlap": bool(args.overlap),
                    "reps": reps, "rows": rows}, f, indent=2)
     print(f"wrote {out}")
 

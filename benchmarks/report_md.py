@@ -244,9 +244,27 @@ def offload_stream_section():
           f"{lf['gbps']:.1f} GB/s / {lf['latency_us']:.0f} µs)\n")
     for line in offload_stream_table(rec["rows"]):
         print(line)
-    print(f"\n(overlap vs blocking: {rec['overlap_speedup']:.2f}x — the "
-          "wall-clock value of hiding H2D expert streaming behind decode "
-          "compute; see repro/serving/expert_store.py.)")
+    if "overlap_speedup" in rec:
+        print(f"\n(overlap vs blocking: {rec['overlap_speedup']:.2f}x — "
+              "the wall-clock value of hiding H2D expert streaming behind "
+              "decode compute; see repro/serving/expert_store.py.)")
+    if any("breakdown" in r for r in rec["rows"]):
+        print("\n#### Pipeline breakdown (per-step, timed window)\n")
+        for line in offload_breakdown_table(rec["rows"]):
+            print(line)
+        host = rec.get("host", {})
+        if host:
+            print(f"\n(host: {host.get('affinity_cores')} usable cores of "
+                  f"{host.get('cpu_count')}, {host.get('active_threads')} "
+                  f"live threads — oversubscribed="
+                  f"{host.get('oversubscribed')}; copy/compute overlap "
+                  "needs idle host cores to drive the transfer.)")
+        if "pipelined_speedup_vs_overlap" in rec:
+            print(f"(pipelined vs overlap: "
+                  f"{rec['pipelined_speedup_vs_overlap']:.2f}x, fewer "
+                  f"misses={rec.get('pipelined_fewer_misses')} — per-layer "
+                  "inject streaming keeps decisions t+1-fresh with the "
+                  "commit amortized across layers; DESIGN.md §9.)")
 
 
 def offload_stream_table(rows):
@@ -261,6 +279,31 @@ def offload_stream_table(rows):
                    f"| {r['h2d_rows_per_step']:.2f} "
                    f"| {r['h2d_mb_per_step']:.3f} "
                    f"| {r['fallback_rows_per_step']:.2f} |")
+    return out
+
+
+def offload_breakdown_table(rows):
+    """Markdown table lines for the per-step timing breakdown recorded by
+    offload_stream (DESIGN.md §9): host stage / commit time, the full
+    pre-dispatch span (what the decode waits on before it can launch)
+    and the dispatch-to-sync span.  Rows without a breakdown ("modeled")
+    print dashes."""
+    out = ["| mode | stage ms | commit ms | pre-dispatch ms | "
+           "compute+sync ms | miss rows | H2D MB |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        b = r.get("breakdown")
+        if not b:
+            out.append(f"| {r['mode']} | — | — | — | — | "
+                       f"{r['fallback_rows_per_step']:.2f} | "
+                       f"{r['h2d_mb_per_step']:.3f} |")
+            continue
+        out.append(f"| {r['mode']} | {b['stage_ms']:.3f} "
+                   f"| {b['commit_ms']:.3f} "
+                   f"| {b['pre_dispatch_ms']:.3f} "
+                   f"| {b['compute_sync_ms']:.3f} "
+                   f"| {r['fallback_rows_per_step']:.2f} "
+                   f"| {r['h2d_mb_per_step']:.3f} |")
     return out
 
 

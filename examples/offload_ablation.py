@@ -3,7 +3,7 @@
 routing trace of a trained smoke-scale MoE under the paper's local-PC cost
 profile — then the same "dali" policy run PHYSICALLY: expert weights in a
 host store, decode against a device slot pool, modeled vs blocking vs
-overlapped H2D streaming side by side (DESIGN.md §8).
+overlapped vs pipelined H2D streaming side by side (DESIGN.md §8–§9).
 
   PYTHONPATH=src python examples/offload_ablation.py
 """
@@ -94,8 +94,9 @@ def main():
                       router_type=cfg.moe.router_type)
     rv = jnp.asarray(np.stack(res))
     warm, steps = 8, 20
-    print(f"\n{'--offload':26s} {'wall µs/step':>12s} {'streamed MB':>12s}")
-    for mode in ("modeled", "blocking", "overlap"):
+    print(f"\n{'--offload':26s} {'wall µs/step':>12s} {'streamed MB':>12s}"
+          f" {'miss rows':>10s}")
+    for mode in ("modeled", "blocking", "overlap", "pipelined"):
         store = make_store(mode, params, cfg, pol)
         dparams = (params if store is None
                    else strip_expert_params(params, cfg))
@@ -107,7 +108,9 @@ def main():
                 t0 = time.perf_counter()
             # the store's hooks schedule the streaming around the
             # dispatch (blocking: on the critical path; overlap: commit
-            # at the idle boundary, stage behind the in-flight step)
+            # at the idle boundary, stage behind the in-flight step;
+            # pipelined: per-layer inject buffers staged before the
+            # dispatch, folded in-graph — DESIGN.md §9)
             if store is not None:
                 state["offload"] = store.pre_step(state["offload"], mode,
                                                   target)
@@ -119,7 +122,8 @@ def main():
                 target = store.next_target(state, tel)
         us = (time.perf_counter() - t0) / steps * 1e6
         mb = store.h2d_bytes / 1e6 if store is not None else 0.0
-        print(f"{mode:26s} {us:12.0f} {mb:12.2f}")
+        miss = store.fallback_rows if store is not None else 0
+        print(f"{mode:26s} {us:12.0f} {mb:12.2f} {miss:10d}")
 
 
 if __name__ == "__main__":

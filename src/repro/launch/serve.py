@@ -16,7 +16,9 @@ the paper's method and its ablation baselines run through the same
 serving stack.  ``--offload`` picks how the policy's decisions reach the
 hardware: "modeled" (telemetry only, every expert on device), "blocking"
 or "overlap" (physical host store + device slot pool, copies on or off
-the decode critical path — DESIGN.md §8).  ``--server wave`` selects the
+the decode critical path — DESIGN.md §8), or "pipelined" (per-layer
+inject streaming: copies off the critical path and decisions fresh at
+t+1 — DESIGN.md §9).  ``--server wave`` selects the
 historical wave scheduler (equal-padded waves, lockstep decode) — the
 compat baseline the serving benchmark compares against; see DESIGN.md
 §3/§7.
@@ -49,11 +51,14 @@ def main():
                     help="offload policy: dali|static|all_gpu|lru|score|"
                          "statistical|random|none")
     ap.add_argument("--offload", default="modeled",
-                    choices=["modeled", "blocking", "overlap"],
+                    choices=["modeled", "blocking", "overlap",
+                             "pipelined"],
                     help="physical expert residency: modeled (decisions "
                          "feed telemetry only), blocking / overlap "
                          "(host store + device slot pool; copies on / "
-                         "off the decode critical path)")
+                         "off the decode critical path), pipelined "
+                         "(per-layer inject streaming: copies off the "
+                         "critical path AND t+1-fresh decisions)")
     ap.add_argument("--train-steps", type=int, default=120)
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--batch", type=int, default=8)

@@ -57,7 +57,9 @@ def init_block(key, cfg: ModelConfig, kinds):
 def apply_block(params, x, cfg: ModelConfig, kinds, *, positions,
                 cache=None, cross_src=None, causal: bool = True,
                 moe_capacity: Optional[int] = None,
-                slots=None, slot_fetch=None, slot_live=None):
+                count_overlap: Optional[bool] = None,
+                slots=None, slot_fetch=None, slot_live=None,
+                slot_inject=None):
     mixer_kind, mlp_kind = kinds
     moe_info = None
     new_cache = cache
@@ -103,10 +105,15 @@ def apply_block(params, x, cfg: ModelConfig, kinds, *, positions,
     if mlp_kind != "none":
         h = apply_norm(params["norm2"], x, cfg)
         if mlp_kind == "moe":
+            # routing dispatches straight off the norm2 output — under
+            # EP, apply_moe's count exchange therefore overlaps the
+            # attention epilogue above (count_overlap, DESIGN.md §9)
             y, moe_info = apply_moe(params["mlp"], h, cfg,
                                     capacity=moe_capacity,
+                                    count_overlap=count_overlap,
                                     slots=slots, slot_fetch=slot_fetch,
-                                    slot_live=slot_live)
+                                    slot_live=slot_live,
+                                    slot_inject=slot_inject)
         else:
             y = apply_mlp(params["mlp"], h, cfg)
             if mixer_kind == "cross":   # gated FFN on VLM cross layers

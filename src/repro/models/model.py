@@ -89,6 +89,7 @@ def apply_encoder(params, src, cfg: ModelConfig):
 
 def apply_model(params, tokens, cfg: ModelConfig, *, positions=None,
                 caches=None, cross_src=None, moe_capacity=None,
+                count_overlap=None,
                 trace: bool = False, last_logit_only: bool = False,
                 logit_index=None, expert_slots=None, slot_fetch=None,
                 slot_live=None):
@@ -106,9 +107,15 @@ def apply_model(params, tokens, cfg: ModelConfig, *, positions=None,
     device slot-pool slices, scan entries stacked (n_super, ...)) plus
     ``slot_fetch`` (the store, for miss fallbacks) switch MoE layers to
     the physical-offload slot path; slot slices thread through the scan
-    exactly like caches.  ``slot_live`` (B·S,) bool marks live batch
-    slots so dead rows never trigger miss fallbacks (invariant across
-    layers — a scan constant, not an xs)."""
+    exactly like caches — with a pipelined store the view additionally
+    carries per-layer expert→inject-row maps in the xs plus the staged
+    insert rows themselves under ``"inject_rows"``, a scan CONSTANT the
+    FFN indexes ``[lid, row]`` (each layer resolves this step's plan
+    without the buffers being sliced through the scan, DESIGN.md §9).
+    ``slot_live`` (B·S,) bool marks live batch slots so dead rows never
+    trigger miss fallbacks (invariant across layers — a scan constant,
+    not an xs).  ``count_overlap`` threads to apply_moe's EP exchange
+    (hoist the count all_to_all ahead of the dispatch math)."""
     prefix_pat, period_pat, n_super = scan_pattern(cfg)
     B, S = tokens.shape
     if positions is None:
@@ -124,6 +131,12 @@ def apply_model(params, tokens, cfg: ModelConfig, *, positions=None,
                     else tuple(None for _ in prefix_pat))
     slots_scan = (expert_slots["scan"] if expert_slots is not None
                   else tuple(None for _ in period_pat))
+    # a pipelined store's staged insert rows: one (L, max_moves, ...)
+    # buffer set shared by every layer — closed over by the scan body as
+    # a CONSTANT (indexed [lid, row] inside slot_expert_ffn), never
+    # sliced through the scan's xs like the pools are
+    slot_inject = (expert_slots.get("inject_rows")
+                   if expert_slots is not None else None)
     infos = []
     new_prefix_caches = []
     for i, kinds in enumerate(prefix_pat):
@@ -132,9 +145,11 @@ def apply_model(params, tokens, cfg: ModelConfig, *, positions=None,
                                  positions=positions, cache=c,
                                  cross_src=cross_src,
                                  moe_capacity=moe_capacity,
+                                 count_overlap=count_overlap,
                                  slots=slots_prefix[i],
                                  slot_fetch=slot_fetch,
-                                 slot_live=slot_live)
+                                 slot_live=slot_live,
+                                 slot_inject=slot_inject)
         new_prefix_caches.append(c)
         infos.append(_trim_info(info, trace))
 
@@ -148,9 +163,11 @@ def apply_model(params, tokens, cfg: ModelConfig, *, positions=None,
                                      positions=positions, cache=c,
                                      cross_src=cross_src,
                                      moe_capacity=moe_capacity,
+                                     count_overlap=count_overlap,
                                      slots=s_slices[p],
                                      slot_fetch=slot_fetch,
-                                     slot_live=slot_live)
+                                     slot_live=slot_live,
+                                     slot_inject=slot_inject)
             x = hint(x, "batch", "res_seq", "embed")
             new_cs.append(c)
             step_infos.append(_trim_info(info, trace))

@@ -170,7 +170,7 @@ def grouped_expert_ffn(params, xf, idx, gates, cfg: ModelConfig):
 
 
 def slot_expert_ffn(slots, slot_fetch, xf, idx, gates, cfg: ModelConfig,
-                    live=None):
+                    live=None, slot_inject=None):
     """Physical-offload decode path: weights come from the device slot
     pool instead of a full (E, ...) stack (serving/expert_store.py).
 
@@ -204,6 +204,20 @@ def slot_expert_ffn(slots, slot_fetch, xf, idx, gates, cfg: ModelConfig,
     wg = slots["gate"][srow]                       # (T*K, d, f)
     wu = slots["up"][srow]
     wd = slots["down"][srow]
+    if slot_inject is not None:
+        # pipelined offload (DESIGN.md §9): an inserted expert reads its
+        # freshly staged inject row (slot_of, built from the post-plan
+        # table, already points at its slot; the pool row underneath
+        # stays stale until the buffer folds).  The (buf_cap, ...)
+        # inject buffers hold GLOBAL rows shared by all layers and are
+        # a scan CONSTANT — the per-layer expert→row map inj_of rides
+        # the xs, so only the activated rows are ever gathered
+        ipos = slots["inj_of"][flat_e]             # (T*K,) inject row or -1
+        use_inj = (ipos >= 0)[:, None, None]
+        irow = jnp.clip(ipos, 0)
+        wg = jnp.where(use_inj, slot_inject["gate"][irow], wg)
+        wu = jnp.where(use_inj, slot_inject["up"][irow], wu)
+        wd = jnp.where(use_inj, slot_inject["down"][irow], wd)
     any_miss = jnp.any(~hit)
     if slot_fetch.fallback == "host":
         hm = hit[:, None]
@@ -286,7 +300,9 @@ def local_dispatch(xf, idx, E, K, C, valid_rep=None):
 def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None,
               valid=None, force_path: Optional[str] = None,
               force_exchange: Optional[str] = None,
-              slots=None, slot_fetch=None, slot_live=None):
+              count_overlap: Optional[bool] = None,
+              slots=None, slot_fetch=None, slot_live=None,
+              slot_inject=None):
     """Returns (y, info) where info carries DALI's routing observables.
 
     ``valid`` (T,) bool marks real tokens (None = all real): padded tokens
@@ -297,11 +313,16 @@ def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None,
     and benchmarks; by default ``use_sparse_path`` selects statically from
     shapes.  ``force_exchange`` pins the expert-parallel exchange flavor
     ("dense" | "ragged", see moe_ep.apply_moe_ep) and only matters when
-    the EP path is taken.  ``slots`` + ``slot_fetch`` (an ExpertStore)
+    the EP path is taken; so does ``count_overlap`` (None = on), which
+    hoists the ragged exchange's tiny count all_to_all ahead of the
+    dispatch index math so its round trip overlaps adjacent compute
+    (DESIGN.md §9).  ``slots`` + ``slot_fetch`` (an ExpertStore)
     select the physical-offload slot-pool path — decode-sized inputs
     only; ``slot_live`` (T,) bool keeps dead batch slots from triggering
-    miss fallbacks; routing/workload observables stay identical to the
-    other paths (DESIGN.md §8)."""
+    miss fallbacks; ``slot_inject`` carries a pipelined store's staged
+    insert rows (scan-constant global-row (buf_cap, ...) buffers, §9);
+    routing/workload observables stay identical to the other paths
+    (DESIGN.md §8)."""
     from repro.launch.sharding import hint
     from repro.models.moe_ep import apply_moe_ep, ep_applicable
     if force_path not in (None, "dense", "sparse"):
@@ -315,7 +336,8 @@ def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None,
         # production path under an active mesh: shard_map expert-parallel
         # all-to-all dispatch (see moe_ep.py / EXPERIMENTS.md §Perf)
         return apply_moe_ep(params, x, cfg, capacity=capacity,
-                            force_exchange=force_exchange)
+                            force_exchange=force_exchange,
+                            count_overlap=count_overlap)
     if slots is not None and T_all > MOE_CHUNK_TOKENS:
         raise ValueError("the slot-pool path serves decode-sized steps; "
                          f"{T_all} tokens exceed MOE_CHUNK_TOKENS")
@@ -375,7 +397,7 @@ def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None,
             # physical offload: weights from the device slot pool, misses
             # from the host tier (serving/expert_store.py)
             y = slot_expert_ffn(slots, slot_fetch, xf, idx, gates, cfg,
-                                live=slot_live)
+                                live=slot_live, slot_inject=slot_inject)
         else:
             y = grouped_expert_ffn(params, xf, idx, gates, cfg)
         counts = _workload_counts(idx.reshape(-1), E, vrep)

@@ -109,7 +109,8 @@ def _ep_expert_ffn(xa, wg, wu, wd, cnt_rx, cfg: ModelConfig):
 
 def apply_moe_ep(params, x, cfg: ModelConfig, *,
                  capacity: Optional[int] = None,
-                 force_exchange: Optional[str] = None):
+                 force_exchange: Optional[str] = None,
+                 count_overlap: Optional[bool] = None):
     """shard_map expert-parallel MoE.  x (B,S,d) -> (y, info).
 
     ``capacity`` (stated for the full batch, like apply_moe's) scales to
@@ -121,7 +122,16 @@ def apply_moe_ep(params, x, cfg: ModelConfig, *,
     workload via the count exchange + capacity ladder.  Observables
     (workload / aux / z / dropped) are identical either way; the ragged
     path additionally reports the shipped capacity as ``info["ep_cx"]``.
-    """
+
+    ``count_overlap`` (None = on) moves the ragged path's count
+    all_to_all to the FRONT of the shard body — counts only need the
+    routing choices, which exist the moment attention hands the layer
+    its input, so the tiny exchange plus its pmax/ladder-select round
+    trip is dispatched before (and overlaps with) the dispatch index
+    math, the FSDP weight gathers and the shared-expert MLP instead of
+    stalling the bucket exchange (DESIGN.md §9).  The counts are the
+    same ``bincount`` ``local_dispatch`` later computes, so outputs,
+    ``ep_cx`` and drops are bit-identical with the overlap off."""
     from jax.experimental.shard_map import shard_map
     from repro.launch import sharding as shd
     from repro.models.layers import apply_mlp
@@ -153,6 +163,7 @@ def apply_moe_ep(params, x, cfg: ModelConfig, *,
         C = max(4, -(-share // 4) * 4)
     dpa = dp_axes if len(dp_axes) > 1 else dp_axes[0]
     ragged = force_exchange != "dense"
+    overlap = True if count_overlap is None else count_overlap
     caps = exchange_ladder(C)
 
     fs = "data" if fsdp else None
@@ -171,12 +182,41 @@ def apply_moe_ep(params, x, cfg: ModelConfig, *,
         # xb: (B/dp, S/tp, d) — this device's tokens
         xf = xb.reshape(-1, d)
         gates, idx, probs, logits = route({"router": router}, xf, m)
+
+        cnt_rx = sel = caps_arr = None
+        if ragged and overlap:
+            # (1, hoisted) the count exchange needs only the routing
+            # choices — dispatch it NOW, before the sort/gather index
+            # math, so the all_to_all + pmax round trip runs under the
+            # dispatch / weight-gather / shared-expert compute below.
+            # Same bincount local_dispatch computes → bit-identical.
+            cnt = jnp.minimum(jnp.bincount(idx.reshape(-1), length=E + 1)
+                              [:E], C).astype(jnp.int32)
+            cnt_rx = jax.lax.all_to_all(cnt.reshape(tp, E // tp), "model",
+                                        split_axis=0, concat_axis=0)
+            gmax = jax.lax.pmax(jnp.max(cnt), ("model",) + dp_axes)
+            caps_arr = jnp.asarray(caps, jnp.int32)
+            sel = jnp.minimum(jnp.searchsorted(caps_arr, gmax),
+                              len(caps) - 1)
+
         xe, counts, se, rank, inv = local_dispatch(xf, idx, E, K, C)
 
         if fsdp:    # materialise full expert weights once, explicitly
             wg = jax.lax.all_gather(wg, "data", axis=2, tiled=True)
             wu = jax.lax.all_gather(wu, "data", axis=2, tiled=True)
             wd = jax.lax.all_gather(wd, "data", axis=1, tiled=True)
+
+        y_shared = None
+        if m.n_shared and ragged and overlap:
+            # hoist the shared-expert MLP between the count dispatch and
+            # the ladder select: dense compute with no data dependence on
+            # the exchange, exactly what hides the select's round trip
+            sh = dict(shared)
+            if fsdp:
+                sh = {k: jax.lax.all_gather(
+                    v, "data", axis=(1 if k in ("gate", "up") else 0),
+                    tiled=True) for k, v in sh.items()}
+            y_shared = apply_mlp(sh, xf, cfg)
 
         def exchange(cx, cnt_rx):
             """Ship cx-row buckets to expert owners, compute, ship back.
@@ -201,19 +241,23 @@ def apply_moe_ep(params, x, cfg: ModelConfig, *,
             contrib_s = exchange(C, None)(xe)
             cx_used = jnp.asarray(C, jnp.int32)
         else:
-            # (1) tiny count exchange: every expert owner learns each
-            # source device's per-expert demand before bucket data moves
-            cnt = jnp.minimum(counts, C).astype(jnp.int32)
-            cnt_rx = jax.lax.all_to_all(cnt.reshape(tp, E // tp), "model",
-                                        split_axis=0, concat_axis=0)
-            # (2) workload-sized capacity: smallest ladder rung covering
-            # the global max demand; pmax over every mesh axis so all
-            # devices take the SAME branch (collectives inside a branch
-            # are only correct if all participants agree on it)
-            gmax = jax.lax.pmax(jnp.max(cnt), ("model",) + dp_axes)
-            caps_arr = jnp.asarray(caps, jnp.int32)
-            sel = jnp.minimum(jnp.searchsorted(caps_arr, gmax),
-                              len(caps) - 1)
+            if not overlap:
+                # (1) tiny count exchange: every expert owner learns each
+                # source device's per-expert demand before bucket data
+                # moves
+                cnt = jnp.minimum(counts, C).astype(jnp.int32)
+                cnt_rx = jax.lax.all_to_all(cnt.reshape(tp, E // tp),
+                                            "model",
+                                            split_axis=0, concat_axis=0)
+                # (2) workload-sized capacity: smallest ladder rung
+                # covering the global max demand; pmax over every mesh
+                # axis so all devices take the SAME branch (collectives
+                # inside a branch are only correct if all participants
+                # agree on it)
+                gmax = jax.lax.pmax(jnp.max(cnt), ("model",) + dp_axes)
+                caps_arr = jnp.asarray(caps, jnp.int32)
+                sel = jnp.minimum(jnp.searchsorted(caps_arr, gmax),
+                                  len(caps) - 1)
             if len(caps) == 1:
                 contrib_s = exchange(C, cnt_rx)(xe)
             else:
@@ -230,12 +274,14 @@ def apply_moe_ep(params, x, cfg: ModelConfig, *,
                     * gates.astype(contrib.dtype)[..., None], axis=1)
         y = y.astype(xb.dtype)
         if m.n_shared:
-            sh = dict(shared)
-            if fsdp:
-                sh = {k: jax.lax.all_gather(
-                    v, "data", axis=(1 if k in ("gate", "up") else 0),
-                    tiled=True) for k, v in sh.items()}
-            y = y + apply_mlp(sh, xf, cfg)
+            if y_shared is None:
+                sh = dict(shared)
+                if fsdp:
+                    sh = {k: jax.lax.all_gather(
+                        v, "data", axis=(1 if k in ("gate", "up") else 0),
+                        tiled=True) for k, v in sh.items()}
+                y_shared = apply_mlp(sh, xf, cfg)
+            y = y + y_shared
 
         # global observables
         g_counts = jax.lax.psum(counts, ("model",) + dp_axes)

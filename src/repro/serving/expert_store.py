@@ -49,6 +49,24 @@ weights sat in device memory and the OffloadPolicy's ``resident`` /
     blocking`` baseline, which keeps the whole copy on the decode
     critical path and thereby measures exactly what overlap hides.
 
+  * **Pipelined per-layer streaming** (``--offload pipelined``,
+    DESIGN.md §9) — overlap's double-buffer hides the copy but delays
+    decisions: a plan staged behind step t+1 is only committed (and
+    readable) at t+2.  The pipelined mode instead ships the plan as
+    *inject buffers* ``(buf_cap, ...)`` BEFORE the dispatch: a small
+    pool of GLOBAL weight rows shared by all layers, closed over by the
+    decode step's ``lax.scan`` body as scan constants (indexed
+    ``[row]``, no per-layer slice copies) while the tiny per-layer
+    expert→row map ``inj_of`` rides the xs like the pool slices.  Each
+    MoE layer resolves its own inserts in-graph right where it gathers
+    (``models/moe.py::slot_expert_ffn``), so a decision made after
+    step t's sync is readable at step t+1 and the per-step device work
+    is O(insert rows) — the big pool arrays never enter the per-step
+    program.  Inserted rows ACCUMULATE in the buffers across steps and
+    fold into the single pool generation by one donated scatter only
+    when the buffer fills, so injection never re-ships rows and the
+    O(pool) touch is amortized over ~buf_cap/insert-rate steps.
+
     Ownership note: the ``state["offload"]`` pytree is owned by the
     store between updates — after ``commit`` returns, the PREVIOUS
     generation's arrays become the spare and are donated (invalidated)
@@ -72,6 +90,9 @@ step never pays a host round trip.
 """
 from __future__ import annotations
 
+import functools
+import time
+
 import numpy as np
 
 import jax
@@ -81,6 +102,7 @@ from repro.models.config import ModelConfig, scan_pattern
 
 
 FALLBACKS = ("fetch", "host")
+STORE_MODES = ("blocking", "overlap", "pipelined")
 
 
 def _np_act(name: str):
@@ -208,12 +230,17 @@ class ExpertStore:
     lockstep (both apply the same deterministic plan)."""
 
     def __init__(self, params, cfg: ModelConfig, n_slots: int,
-                 max_moves: int = 4, fallback: str = "fetch"):
+                 max_moves: int = 4, fallback: str = "fetch",
+                 mode: str = "overlap"):
         if cfg.moe is None:
             raise ValueError("ExpertStore needs an MoE architecture")
         if fallback not in FALLBACKS:
             raise ValueError(f"fallback must be one of "
                              f"{'|'.join(FALLBACKS)}, got {fallback!r}")
+        if mode not in STORE_MODES:
+            raise ValueError(f"mode must be one of "
+                             f"{'|'.join(STORE_MODES)}, got {mode!r}")
+        self.mode = mode
         self.cfg = cfg
         m = cfg.moe
         self.E = m.n_routed
@@ -252,6 +279,8 @@ class ExpertStore:
         self.fallback_fetches = 0         # experts demand-fetched
         self.h2d_rows = 0                 # experts streamed into the pool
         self.h2d_bytes = 0
+        self.stage_s = 0.0                # host time in stage()/inject build
+        self.commit_s = 0.0               # host time in commit dispatch/wait
         self._cur = np.full((self.n_layers, n_slots), -1, np.int32)
         # ping-pong generation state: the spare pool buffers (donated in
         # place by the next step_update) and the plan rows the spare is
@@ -265,6 +294,28 @@ class ExpertStore:
         # place (O(rows), not a pool copy) — safe because the spare's
         # last reader retired a full step ago (see module docstring)
         self._apply_jit = jax.jit(self._apply, donate_argnums=(0, 1, 2, 3))
+        # pipelined: inserted rows accumulate in PERSISTENT device inject
+        # buffers (allocated once, updated in place by a donated row
+        # scatter — each step ships only its valid insert rows) and are
+        # selected by inj_of until the buffer fills, when they fold
+        # into the pool in one amortized scatter.  _live is the host
+        # ledger of unfolded rows: (layer, buf_row, dst, expert).
+        self._live = []
+        # buffer capacity in GLOBAL rows shared by all layers: the
+        # decode closes over the buffers as scan constants, so its cost
+        # scales with their size — max_moves rows keep them ~pool/S
+        # sized while still amortizing folds over a few steps (heavy
+        # plans stage in ≤cap chunks with a fold between chunks)
+        self._buf_cap = self.max_moves
+        self._idle_inj = None
+        self._inject_bufs = None
+        self._stage_inj_jit = jax.jit(
+            functools.partial(self._stage_inj, S=self.n_slots),
+            donate_argnums=(0, 1, 2))
+        self._fold_inj_jit = jax.jit(self._fold_inj,
+                                     donate_argnums=(0, 1, 2))
+        if self.mode == "pipelined":
+            self._prewarm_pipeline()
 
     # -- device state ------------------------------------------------------
 
@@ -289,12 +340,23 @@ class ExpertStore:
         self._cur = cur.copy()
         off = {k: jax.device_put(v) for k, v in pools.items()}
         off["cur"] = jax.device_put(cur)
-        # second generation for the streaming ping-pong (same contents)
-        self._spare = {k: jax.device_put(v) for k, v in pools.items()}
-        self._spare["cur"] = jax.device_put(cur)
+        # second generation for the streaming ping-pong (same contents).
+        # pipelined is single-generation — its inject buffers replace
+        # the spare — so it skips the extra O(pool) allocation
+        self._spare = None
+        if self.mode != "pipelined":
+            self._spare = {k: jax.device_put(v) for k, v in pools.items()}
+            self._spare["cur"] = jax.device_put(cur)
         self._spare_lag = np.zeros((0, 3), np.int32)
         self._staged = None
         self._staged_rows = None
+        self._live = []
+        self._idle_inj = None
+        if self.mode == "pipelined":
+            # the inject seam rides in state["offload"] from step 0 so
+            # the decode (and admit) pytree structure never changes
+            off["inject"] = self._build_inj()
+            self._idle_inj = off["inject"]
         return off
 
     # -- the slot-indexed view the model consumes --------------------------
@@ -304,9 +366,21 @@ class ExpertStore:
         ``{"prefix": (...), "scan": (...)}`` with per-MoE-layer entries
         ``{"gate","up","down","slot_of","lid"}`` (scan entries carry a
         leading n_super axis and ride the scan's xs exactly like caches).
-        Traced-friendly — called inside the jitted decode step."""
+        Traced-friendly — called inside the jitted decode step.
+
+        With a pipelined ``off["inject"]`` present (DESIGN.md §9) the
+        slot table is read from the inject's post-plan ``cur`` — so
+        ``slot_of`` already resolves this step's inserts — each layer's
+        entry additionally carries its expert→inject-row map ``inj_of``
+        (E,) through the scan's xs, and the staged insert rows ride the
+        view ONCE as ``view["inject_rows"]`` ((buf_cap, ...) GLOBAL
+        rows shared by all layers — a scan constant
+        ``slot_expert_ffn`` indexes ``[row]``, so the buffers are never
+        sliced per super-block and stay tiny); inserted experts read
+        inject rows instead of the (stale until the fold) pool rows."""
         E, S = self.E, self.n_slots
-        cur = off["cur"]                                       # (L, S)
+        inj = off.get("inject")
+        cur = inj["cur"] if inj is not None else off["cur"]    # (L, S)
 
         def invert(c):
             idx = jnp.where(c >= 0, c, E)
@@ -322,6 +396,8 @@ class ExpertStore:
             prefix[i] = {"gate": off["gate"][l], "up": off["up"][l],
                          "down": off["down"][l], "slot_of": slot_of[l],
                          "lid": jnp.asarray(l, jnp.int32)}
+            if inj is not None:
+                prefix[i]["inj_of"] = inj["inj_of"][l]
 
         scan = [None] * len(period_pat)
         P = len(self._scan_moe)
@@ -336,7 +412,13 @@ class ExpertStore:
                            "down": per_pos(off["down"], j),
                            "slot_of": per_pos(slot_of, j),
                            "lid": jnp.asarray(lids, jnp.int32)}
-        return {"prefix": tuple(prefix), "scan": tuple(scan)}
+                if inj is not None:
+                    scan[p]["inj_of"] = per_pos(inj["inj_of"], j)
+        view = {"prefix": tuple(prefix), "scan": tuple(scan)}
+        if inj is not None:
+            view["inject_rows"] = {"gate": inj["gate"], "up": inj["up"],
+                                   "down": inj["down"]}
+        return view
 
     # -- miss fallbacks (host callbacks, see module docstring) -------------
 
@@ -393,6 +475,221 @@ class ExpertStore:
         cur = cur.at[lay, slot_eff].set(exp, mode="drop")
         return pool_g, pool_u, pool_d, cur
 
+    # -- pipelined per-layer streaming (DESIGN.md §9) ----------------------
+
+    @staticmethod
+    def _stage_inj(buf_g, buf_u, buf_d, pos, rowsbuf, meta, *, S):
+        """Per-step pipelined stage, ONE dispatch that touches ONLY the
+        small persistent inject buffers — the (L, S, d, f) pool arrays
+        never enter this program, so the per-step cost is O(insert
+        rows), not an O(pool) donate/alias round trip.
+
+        The host args are PACKED so each step ships three transfers:
+        ``pos (Q,)`` int32 = global buffer rows of this step's inserts;
+        ``rowsbuf (3, Q, d*f)`` = their gate/up/down weights flattened;
+        ``meta (L, S+E)`` int32 = post-plan ``cur`` | ``inj_of``, split
+        back out in-graph.  Padding rows carry pos = B and drop on
+        scatter.  Buffer rows not overwritten keep earlier steps'
+        weights — the point: unfolded rows ACCUMULATE here until
+        ``_fold_inj``."""
+        Q = pos.shape[0]
+        d, f = buf_g.shape[1], buf_g.shape[2]
+        buf_g = buf_g.at[pos].set(rowsbuf[0].reshape(Q, d, f), mode="drop")
+        buf_u = buf_u.at[pos].set(rowsbuf[1].reshape(Q, d, f), mode="drop")
+        buf_d = buf_d.at[pos].set(rowsbuf[2].reshape(Q, f, d), mode="drop")
+        return buf_g, buf_u, buf_d, meta[:, :S], meta[:, S:]
+
+    @staticmethod
+    def _fold_inj(pool_g, pool_u, pool_d, buf_g, buf_u, buf_d, fidx):
+        """Occasional buffer→pool fold: gather the live unfolded rows
+        out of the inject buffers (``fidx (3, F)`` int32 = lay, row,
+        dst; padding rows carry layer L — the row gather clamps and the
+        scatter drops them) and scatter them into the donated pool.
+        This is the only pipelined program that touches the pool; it
+        runs when the buffer fills (~every buf_cap/insert-rate steps),
+        so its cost is amortized instead of paid per step."""
+        flay, frow, fdst = fidx
+        pool_g = pool_g.at[flay, fdst].set(buf_g[frow], mode="drop")
+        pool_u = pool_u.at[flay, fdst].set(buf_u[frow], mode="drop")
+        pool_d = pool_d.at[flay, fdst].set(buf_d[frow], mode="drop")
+        return pool_g, pool_u, pool_d
+
+    def _inject_buffers(self):
+        B = self._buf_cap
+        if self._inject_bufs is None:
+            self._inject_bufs = (
+                jnp.zeros((B, self.d, self.f), self.dtype),
+                jnp.zeros((B, self.d, self.f), self.dtype),
+                jnp.zeros((B, self.f, self.d), self.dtype))
+        return self._inject_bufs
+
+    def _prewarm_pipeline(self):
+        """Compile every pow2 row-bucket variant of the two pipelined
+        programs up front (throwaway donated dummies; the jit cache keys
+        on shapes only).  The bucket set is tiny — Q ≤ pow2(L·max_moves)
+        for the stage, F ≤ pow2(L·buf_cap) for the fold — and paying the
+        compiles at construction keeps them out of serving steps, where
+        a single in-loop compile would dwarf the latency the pipelining
+        saves."""
+        L, S, B = self.n_layers, self.n_slots, self._buf_cap
+        d, f = self.d, self.f
+        rdt = self.host["gate"].dtype
+
+        def bufs():
+            return (jnp.zeros((B, d, f), self.dtype),
+                    jnp.zeros((B, d, f), self.dtype),
+                    jnp.zeros((B, f, d), self.dtype))
+
+        q = 1
+        while True:
+            pos = np.full(q, B, np.int32)
+            rowsbuf = np.zeros((3, q, d * f), rdt)
+            meta = np.zeros((L, S + self.E), np.int32)
+            jax.block_until_ready(self._stage_inj_jit(
+                *bufs(), pos, rowsbuf, meta))
+            if q >= B:
+                break
+            q <<= 1
+        q = 1
+        while True:
+            pools = (jnp.zeros((L, S, d, f), self.dtype),
+                     jnp.zeros((L, S, d, f), self.dtype),
+                     jnp.zeros((L, S, f, d), self.dtype))
+            fidx = np.full((3, q), [[L], [0], [S]], np.int32)
+            jax.block_until_ready(self._fold_inj_jit(*pools, *bufs(), fidx))
+            if q >= B:
+                break
+            q <<= 1
+
+    def _build_inj(self):
+        """The inject pytree for the CURRENT ledger state (inj_of over
+        the live unfolded rows, cur = the host mirror) — the decode
+        step's pytree structure never depends on whether the policy
+        moved anything.  Rows inj_of does not select are never read, so
+        building this ships only two small int32 tables."""
+        buf_g, buf_u, buf_d = self._inject_buffers()
+        return {"gate": buf_g, "up": buf_u, "down": buf_d,
+                "inj_of": jax.device_put(self._inj_of()),
+                "cur": jax.device_put(self._cur.copy())}
+
+    def _pipeline_pre_step(self, off, target):
+        """Pipelined ``pre_step``: plan toward ``target`` against the
+        host mirror, gather ONLY the valid insert rows — a compact
+        (Q, ...) copy, Q = next pow2 of the insert count (the same
+        bucketing ``stage`` uses) — and write them into the persistent
+        inject buffers with one small ``_stage_inj`` dispatch.  The
+        mirror advances immediately: the plan is readable by the VERY
+        NEXT decode (t → t+1 freshness), not after a generation swap.
+
+        Inserted rows live in the buffers (selected by ``inj_of``)
+        across steps and are folded into the pool only when the buffer
+        would overflow — ``_fold_inj``, the one program that touches
+        the O(pool)-sized arrays, amortized over ~buf_cap/insert-rate
+        steps.  Plans larger than the buffer (rare: init bursts, forced
+        resets) stage in ≤buf_cap chunks with a fold between chunks.
+        ``self._live`` is the host ledger of unfolded rows as
+        (layer, buf_row, dst_slot, expert); a row dies when the mirror
+        no longer maps its expert to its slot (evicted or replaced).
+
+        Fast path: a step with no plan changes nothing — pool, buffers
+        and mirror are all as the previous step left them — so it
+        reuses the cached inject and costs zero dispatches."""
+        t0 = time.perf_counter()
+        L, S = self.n_layers, self.n_slots
+        n = 0
+        if target is not None:
+            new_cur, ins_e, ins_s, valid = self.plan(target)
+            n = int(valid.sum())
+        if n == 0:
+            if self._idle_inj is None:
+                self._idle_inj = self._build_inj()
+            self.stage_s += time.perf_counter() - t0
+            return dict(off, inject=self._idle_inj)
+        self._cur = new_cur
+        lr, mc = np.nonzero(valid)
+        ee = ins_e[lr, mc]
+        ds = ins_s[lr, mc]
+        B = self._buf_cap
+        # prune rows the new plan just invalidated (their slot now maps
+        # to a different expert)
+        self._live = [r for r in self._live
+                      if self._cur[r[0], r[2]] == r[3]]
+        done = 0
+        while done < n:
+            room = B - len(self._live)
+            if room <= 0:
+                off = self._fold_live(off)
+                room = B
+            take = min(room, n - done)
+            sl = slice(done, done + take)
+            clr, cee, cds = lr[sl], ee[sl], ds[sl]
+            # allocate buffer rows for this chunk from the free set
+            occ = np.zeros(B, bool)
+            for v in self._live:
+                occ[v[1]] = True
+            alloc = np.nonzero(~occ)[0][:take].astype(np.int32)
+            for i in range(take):
+                self._live.append((int(clr[i]), int(alloc[i]),
+                                   int(cds[i]), int(cee[i])))
+            Q = 1 << (take - 1).bit_length()   # pow2 row bucket
+            # pad rows carry pos = B and drop on scatter; the gathers
+            # write straight into one preallocated packed host buffer
+            # (no stack/concat copies on the critical path)
+            pos = np.full(Q, B, np.int32)
+            pos[:take] = alloc
+            rowsbuf = np.empty((3, Q, self.d * self.f), self.dtype)
+            rowsbuf[:, take:] = 0
+            for k, h in enumerate((self.host["gate"], self.host["up"],
+                                   self.host["down"])):
+                rowsbuf[k, :take] = h[clr, cee].reshape(take, -1)
+            meta = np.concatenate([self._cur.astype(np.int32),
+                                   self._inj_of()], axis=1)
+            buf_g, buf_u, buf_d = self._inject_buffers()
+            buf_g, buf_u, buf_d, cur_d, inj_of_d = self._stage_inj_jit(
+                buf_g, buf_u, buf_d, pos, rowsbuf, meta)
+            self._inject_bufs = (buf_g, buf_u, buf_d)
+            done += take
+            self.h2d_bytes += Q * self.expert_bytes
+        inj = {"gate": buf_g, "up": buf_u, "down": buf_d,
+               "inj_of": inj_of_d, "cur": cur_d}
+        self._idle_inj = inj
+        self.h2d_rows += n
+        self.stage_s += time.perf_counter() - t0
+        return dict(off, inject=inj)
+
+    def _inj_of(self):
+        """(L, E) expert→buffer-row map over the live unfolded rows."""
+        inj_of = np.full((self.n_layers, self.E), -1, np.int32)
+        for l, r, _, e in self._live:
+            inj_of[l, e] = r
+        return inj_of
+
+    def _fold_live(self, off):
+        """Scatter every live unfolded buffer row into the (donated)
+        pool and clear the ledger — the pipelined commit point.  Rows
+        are already on device, so nothing crosses the link; the decode
+        keeps reading them through ``inj_of`` until the NEXT stage
+        rebuilds it, so the fold is invisible to parity."""
+        if not self._live:
+            return off
+        t0 = time.perf_counter()
+        L, S = self.n_layers, self.n_slots
+        F = 1 << (len(self._live) - 1).bit_length()
+        fidx = np.full((3, F), [[L], [0], [S]], np.int32)
+        for i, (l, r, dst, _) in enumerate(self._live):
+            fidx[:, i] = (l, r, dst)
+        buf_g, buf_u, buf_d = self._inject_buffers()
+        pool_g, pool_u, pool_d = self._fold_inj_jit(
+            off["gate"], off["up"], off["down"],
+            buf_g, buf_u, buf_d, fidx)
+        self._live = []
+        # the pool now holds the mirror state; refresh the cur table the
+        # non-inject generation selector reads
+        off = dict(off, gate=pool_g, up=pool_u, down=pool_d,
+                   cur=jax.device_put(self._cur.copy()))
+        self.commit_s += time.perf_counter() - t0
+        return off
+
     def plan(self, target):
         """Lower a (L, E) bool target against the HOST slot-table mirror
         (NumPy twin; the in-graph ``lower_slot_plan`` is parity-tested
@@ -417,10 +714,12 @@ class ExpertStore:
             # a second stage would advance the host mirror past what ever
             # reaches the device — a silent permanent mirror/pool split
             raise RuntimeError("stage() called twice without commit()")
+        t0 = time.perf_counter()
         new_cur, ins_e, ins_s, valid = self.plan(target)
         lay_v, mv = np.nonzero(valid)
         n = len(lay_v)
         if n == 0:
+            self.stage_s += time.perf_counter() - t0
             return False                     # pool already at target
         rows = np.stack([lay_v, ins_s[lay_v, mv], ins_e[lay_v, mv]],
                         axis=1).astype(np.int32)
@@ -454,6 +753,7 @@ class ExpertStore:
         # actual bus traffic: the full staged buffer crosses the link —
         # new rows, spare-lag re-applies AND the pow2 padding rows
         self.h2d_bytes += R * self.expert_bytes
+        self.stage_s += time.perf_counter() - t0
         return True
 
     def commit(self, off, blocking: bool = False):
@@ -470,6 +770,7 @@ class ExpertStore:
         the in-place write cannot race."""
         if self._staged is None:
             return off
+        t0 = time.perf_counter()
         spare = self._spare
         pool_g, pool_u, pool_d, cur = self._apply_jit(
             spare["gate"], spare["up"], spare["down"], spare["cur"],
@@ -484,6 +785,7 @@ class ExpertStore:
         new_off = dict(off, gate=pool_g, up=pool_u, down=pool_d, cur=cur)
         if blocking:
             jax.block_until_ready(new_off)
+        self.commit_s += time.perf_counter() - t0
         return new_off
 
     def step_update(self, off, target, blocking: bool = False):
@@ -506,17 +808,23 @@ class ExpertStore:
         wait (the whole copy on the critical path); "overlap" → commit
         the previously staged rows (the device queue is idle at the step
         boundary, so the donated in-place scatter dispatches without
-        stalling)."""
+        stalling); "pipelined" → fold the previous step's inject into
+        the pool, then stage THIS step's plan as fresh inject buffers
+        riding ``off["inject"]`` — the decode about to dispatch reads
+        the plan through the per-layer seam, t+1 fresh."""
         if mode == "blocking":
             if target is None:
                 return off
             return self.step_update(off, target, blocking=True)
+        if mode == "pipelined":
+            return self._pipeline_pre_step(off, target)
         return self.commit(off)
 
     def post_dispatch(self, mode: str, target):
         """Right after the decode dispatch: in "overlap" mode, stage the
         next plan — the H2D copy hides behind the in-flight step's
-        compute."""
+        compute.  ("pipelined" stages in ``pre_step`` instead: its copy
+        still overlaps, with the dispatched step's own early layers.)"""
         if mode == "overlap" and target is not None:
             self.stage(target)
 
@@ -531,6 +839,7 @@ class ExpertStore:
         return {"h2d_rows": self.h2d_rows, "h2d_bytes": self.h2d_bytes,
                 "fallback_rows": self.fallback_rows,
                 "fallback_fetches": self.fallback_fetches,
+                "stage_s": self.stage_s, "commit_s": self.commit_s,
                 "expert_bytes": self.expert_bytes,
                 "n_slots": self.n_slots, "n_layers": self.n_layers}
 

@@ -27,15 +27,19 @@ names are validated at construction.  Legacy ``dali_cfg``-only
 construction keeps meaning "dali".
 
 Both servers also take ``offload=`` — "modeled" (default: every expert
-weight stays on device, the policy feeds telemetry only), "blocking" or
-"overlap" (physical offload: routed expert weights live in a host
-:class:`repro.serving.expert_store.ExpertStore` and decode reads a
-device slot pool; the policy's cache ∪ prefetch decisions are lowered to
-slot plans and streamed host→device between steps — "blocking" keeps the
-copies on the critical path, "overlap" issues them right after the
-decode dispatch so they hide behind the step's compute, DESIGN.md §8).
-Prefill still runs against the full on-device params (prefill offload is
-a ROADMAP item), so physical mode changes decode only.
+weight stays on device, the policy feeds telemetry only), "blocking",
+"overlap" or "pipelined" (physical offload: routed expert weights live
+in a host :class:`repro.serving.expert_store.ExpertStore` and decode
+reads a device slot pool; the policy's cache ∪ prefetch decisions are
+lowered to slot plans and streamed host→device between steps —
+"blocking" keeps the copies on the critical path, "overlap" issues them
+right after the decode dispatch so they hide behind the step's compute
+at the price of one extra step of decision lag, and "pipelined" ships
+each step's plan as per-layer inject buffers the decode folds in-graph,
+keeping the copy off the critical path AND the decisions t+1-fresh,
+DESIGN.md §8–§9).  Prefill still runs against the full on-device params
+(prefill offload is a ROADMAP item), so physical mode changes decode
+only.
 
 Telemetry is sync-free in both servers: the jitted DALI schedule folds
 per-step sums into a device-side accumulator and the aggregator drains it
@@ -66,7 +70,7 @@ from repro.serving.steps import (init_serve_state, make_admit_prefill,
                                  make_prefill_step, resolve_policy,
                                  retire_slot)
 
-OFFLOAD_MODES = ("modeled", "blocking", "overlap")
+OFFLOAD_MODES = ("modeled", "blocking", "overlap", "pipelined")
 
 
 def make_store(offload: str, params, cfg, policy, fallback: str = "fetch"):
@@ -92,7 +96,7 @@ def make_store(offload: str, params, cfg, policy, fallback: str = "fetch"):
         params, cfg,
         n_slots=min(cfg.moe.n_routed,
                     dcfg.cache_size + dcfg.prefetch_size + moves),
-        max_moves=moves, fallback=fallback)
+        max_moves=moves, fallback=fallback, mode=offload)
 
 
 @dataclass

@@ -25,7 +25,8 @@ wave (shared position — the compat preset)::
     "caches":     model caches pytree
     "dali":       DALI scheduler state (MoE archs with engine enabled)
     "offload":    device slot pools + slot table (physical offload only,
-                  see serving/expert_store.py)
+                  see serving/expert_store.py; a pipelined store adds
+                  "inject" — this step's staged per-layer insert rows)
     "rng":        PRNG key
   }
 
@@ -180,8 +181,12 @@ def make_decode_step(cfg: ModelConfig, dali_cfg: Optional[DaliConfig] = None,
     switches MoE layers to the physical slot-pool path: expert weights
     are read from ``state["offload"]`` device pools (gathered by slot
     id), misses fall back to the store's host tier, and the serving loop
-    streams pool updates between steps (DESIGN.md §8).  Requires a
-    scheduling policy — the slot plans are lowered from its decisions.
+    streams pool updates between steps (DESIGN.md §8).  A pipelined
+    store additionally rides this step's staged inject rows in
+    ``state["offload"]["inject"]`` — ``build_view`` threads them through
+    the scan per layer, so the step reads the freshest plan without any
+    extra step-function plumbing (DESIGN.md §9).  Requires a scheduling
+    policy — the slot plans are lowered from its decisions.
 
     Works for both serve-state layouts: a scalar ``pos`` decodes the wave
     way (shared position); a per-slot ``pos`` (B,) uses per-row positions

@@ -1,4 +1,4 @@
-"""Physical expert residency (serving/expert_store.py, DESIGN.md §8):
+"""Physical expert residency (serving/expert_store.py, DESIGN.md §8–§9):
 
 (a) slot-pool decode is BIT-identical to full-resident decode over
     Zipf/uniform token traces while the pool streams policy decisions —
@@ -10,7 +10,13 @@
 (c) slot-plan lowering: NumPy and JAX mirrors produce identical plans,
     and plan application preserves the pool invariants under
     retire/readmit-style target churn;
-(d) servers produce identical outputs whichever --offload mode runs.
+(d) servers produce identical outputs whichever --offload mode runs;
+(e) pipelined per-layer streaming (DESIGN.md §9): bit-parity against
+    full-resident decode AND against the step-boundary-commit modes over
+    Zipf/uniform traces incl. forced misses mid-trace, no more forced
+    misses than overlap under identical traces, and the t+1-freshness
+    regression — a decision staged at step t is readable by step t+1's
+    decode (overlap only reaches it at t+2).
 """
 import dataclasses
 
@@ -264,7 +270,7 @@ def test_server_outputs_identical_across_offload_modes(model):
     from repro.serving.scheduler import ContinuousBatchServer, Request
     cfg, params = model
     outs = {}
-    for mode in ("modeled", "blocking", "overlap"):
+    for mode in ("modeled", "blocking", "overlap", "pipelined"):
         rng = np.random.default_rng(3)
         srv = ContinuousBatchServer(params, cfg, batch_size=2, max_len=32,
                                     policy="dali", offload=mode)
@@ -276,7 +282,8 @@ def test_server_outputs_identical_across_offload_modes(model):
         outs[mode] = [r.output for r in sorted(done, key=lambda r: r.rid)]
         if mode != "modeled":
             assert srv.store.h2d_rows > 0
-    assert outs["modeled"] == outs["blocking"] == outs["overlap"]
+    assert (outs["modeled"] == outs["blocking"] == outs["overlap"]
+            == outs["pipelined"])
 
 
 def test_offload_requires_scheduling_policy(model):
@@ -288,3 +295,139 @@ def test_offload_requires_scheduling_policy(model):
     with pytest.raises(ValueError, match="modeled"):
         ContinuousBatchServer(params, cfg, batch_size=2, max_len=32,
                               policy="dali", offload="bogus")
+
+
+# --------------------------------------------------------------------------
+# (e) pipelined per-layer streaming (DESIGN.md §9)
+# --------------------------------------------------------------------------
+
+def _run_hooked(cfg, params, mode, kind, n_steps=8, B=2,
+                force_miss_at=None):
+    """Drive one --offload mode through the serving-loop hook protocol
+    (pre_step / decode / post_dispatch / next_target) against a
+    full-resident reference on the same token trace — the exact loop
+    scheduler.py and launch/serve.py run.  Returns per-step logits pairs
+    + the store."""
+    pol = resolve_policy("dali", cfg)
+    dcfg = pol.dcfg
+    store = ExpertStore(params, cfg,
+                        n_slots=dcfg.cache_size + dcfg.prefetch_size,
+                        mode=mode)
+    dec_ref = jax.jit(make_decode_step(cfg, policy=pol))
+    dec_slot = jax.jit(make_decode_step(cfg, policy=pol, offload=store))
+    s_ref = init_serve_state(cfg, B, 48, policy=pol)
+    s_slot = init_serve_state(cfg, B, 48, policy=pol, offload=store)
+    slim = strip_expert_params(params, cfg)
+    rng = np.random.default_rng(7)
+    target = None
+    out = []
+    for t in range(n_steps):
+        tok = _tokens(kind, rng, cfg, B)
+        s_ref["tokens"] = tok
+        s_slot["tokens"] = tok
+        if t == force_miss_at:
+            # blow every pooled expert away mid-trace; for pipelined the
+            # generation selector is the inject table, so empty that too
+            # (weights buffers can stay — inj_of = -1 means no override
+            # row is ever gathered)
+            off = dict(s_slot["offload"],
+                       cur=jnp.full_like(s_slot["offload"]["cur"], -1))
+            if "inject" in off:
+                off["inject"] = dict(
+                    off["inject"],
+                    cur=jnp.full_like(off["inject"]["cur"], -1),
+                    inj_of=jnp.full_like(off["inject"]["inj_of"], -1))
+            s_slot["offload"] = off
+            store._cur[:] = -1
+        s_slot["offload"] = store.pre_step(s_slot["offload"], mode, target)
+        s_ref, lg_ref, _ = dec_ref(params, s_ref)
+        s_slot, lg_slot, tel = dec_slot(slim, s_slot)
+        store.post_dispatch(mode, target)
+        jax.block_until_ready(lg_slot)
+        target = store.next_target(s_slot, tel)
+        out.append((np.asarray(lg_ref), np.asarray(lg_slot)))
+    return out, store
+
+
+@pytest.mark.parametrize("kind", ["zipf", "uniform"])
+def test_pipelined_decode_bit_identical(model, kind):
+    cfg, params = model
+    pairs, store = _run_hooked(cfg, params, "pipelined", kind)
+    for i, (ref, slot) in enumerate(pairs):
+        np.testing.assert_array_equal(ref, slot, err_msg=f"step {i}")
+    # misses + streaming both happened, so the parity is load-bearing
+    assert store.fallback_rows > 0
+    assert store.h2d_rows > 0
+    # the fold + stage run as one fused dispatch timed under stage_s
+    assert store.stage_s > 0.0
+
+
+def test_pipelined_forced_miss_mid_trace_bitwise(model):
+    cfg, params = model
+    pairs, store = _run_hooked(cfg, params, "pipelined", "uniform",
+                               n_steps=6, force_miss_at=3)
+    assert store.fallback_rows > 0
+    for i, (ref, slot) in enumerate(pairs):
+        np.testing.assert_array_equal(ref, slot, err_msg=f"step {i}")
+
+
+def test_pipelined_matches_boundary_commit_modes(model):
+    """Per-layer commit vs step-boundary commit: identical logits every
+    step, and the shrunken decision→visibility lag means pipelined pays
+    the same forced misses as blocking (t+1 fresh) and no more than
+    overlap (t+2 fresh)."""
+    cfg, params = model
+    runs = {m: _run_hooked(cfg, params, m, "zipf", n_steps=10)
+            for m in ("blocking", "overlap", "pipelined")}
+    for i in range(10):
+        np.testing.assert_array_equal(
+            runs["pipelined"][0][i][1], runs["blocking"][0][i][1],
+            err_msg=f"pipelined vs blocking, step {i}")
+        np.testing.assert_array_equal(
+            runs["pipelined"][0][i][1], runs["overlap"][0][i][1],
+            err_msg=f"pipelined vs overlap, step {i}")
+    miss = {m: st.fallback_rows for m, (_, st) in runs.items()}
+    assert miss["pipelined"] == miss["blocking"]
+    assert miss["pipelined"] <= miss["overlap"]
+
+
+def test_pipelined_decision_readable_at_t_plus_1(model):
+    """Freshness regression: a decision staged by pre_step at step t is
+    already selectable by step t's decode (i.e. by the pool read one
+    step after the telemetry that produced it), whereas overlap's staged
+    copy only reaches the live generation at the SECOND pre_step."""
+    cfg, params = model
+    E = cfg.moe.n_routed
+    e_star = E - 1
+    resident = np.zeros((4, E), bool)       # n_layers = 4 in _cfg()
+    resident[:, :2] = True
+
+    store = ExpertStore(params, cfg, n_slots=4, max_moves=2,
+                        mode="pipelined")
+    off = store.init_device_state(resident)
+    target = resident.copy()
+    target[:, e_star] = True
+    off = store.pre_step(off, "pipelined", target)
+    inj = jax.tree.map(np.asarray, off["inject"])
+    for l in range(store.n_layers):
+        assert (inj["cur"][l] == e_star).any(), f"layer {l}"
+        m = int(inj["inj_of"][l, e_star])
+        s = int(np.nonzero(inj["cur"][l] == e_star)[0][0])
+        if m >= 0:
+            # the override row the decode gathers is the real host weight
+            np.testing.assert_array_equal(inj["gate"][m],
+                                          store.host["gate"][l, e_star])
+        else:
+            # this layer's chunk already folded (the global buffer is
+            # smaller than the plan): its POOL row is already fresh
+            np.testing.assert_array_equal(np.asarray(off["gate"])[l, s],
+                                          store.host["gate"][l, e_star])
+
+    store_o = ExpertStore(params, cfg, n_slots=4, max_moves=2,
+                          mode="overlap")
+    off_o = store_o.init_device_state(resident)
+    off_o = store_o.pre_step(off_o, "overlap", target)   # nothing staged yet
+    store_o.post_dispatch("overlap", target)             # stage behind step t
+    assert not (np.asarray(off_o["cur"]) == e_star).any()
+    off_o = store_o.pre_step(off_o, "overlap", target)   # boundary commit
+    assert (np.asarray(off_o["cur"]) == e_star).any()

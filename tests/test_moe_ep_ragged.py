@@ -5,8 +5,11 @@ unaffected.
 
 Covers uniform, Zipf-skewed, all-on-one-expert and zero-token-shard
 routings: outputs, workload/dropped observables, grads through the
-all_to_all pair, and the regression pinning the exchanged capacity
-C_x < C whenever the workload leaves headroom."""
+all_to_all pair, the regression pinning the exchanged capacity
+C_x < C whenever the workload leaves headroom, and the
+attention-overlapped count exchange (count_overlap, DESIGN.md §9) being
+a pure scheduling change — outputs/ep_cx/workload/dropped bit-identical
+with the hoist on vs off, grads matching tightly."""
 import os
 import subprocess
 import sys
@@ -47,14 +50,16 @@ SCRIPT = textwrap.dedent("""
         x[np.arange(T), tgt] += 3.0
         return jnp.asarray(x.reshape(B, S, d), jnp.float32)
 
-    def run(cfg, params, x, force_exchange):
+    def run(cfg, params, x, force_exchange, overlap=None):
         lmap = shd.logical_map_for(cfg, 'prefill_32k', mesh)
         with mesh, shd.rules(mesh, lmap, 'tp'):
             assert ep_applicable(cfg, B, S)
             y, i = jax.jit(lambda p, x: apply_moe(
-                p, x, cfg, force_exchange=force_exchange))(params, x)
+                p, x, cfg, force_exchange=force_exchange,
+                count_overlap=overlap))(params, x)
             g = jax.jit(jax.grad(lambda p: jnp.sum(apply_moe(
-                p, x, cfg, force_exchange=force_exchange)[0] ** 2)))(params)
+                p, x, cfg, force_exchange=force_exchange,
+                count_overlap=overlap)[0] ** 2)))(params)
         return y, i, g
 
     cfg = ModelConfig(d_model=d, d_ff=128, dtype='float32',
@@ -91,7 +96,20 @@ SCRIPT = textwrap.dedent("""
         cx = int(i_rag['ep_cx'])
         assert cx <= expect_cx[kind], (kind, cx, C)
         assert int(i_dns['ep_cx']) == C, kind
-        print(kind, 'cx', cx, 'of C', C)
+        # the attention-overlapped count exchange is a pure scheduling
+        # change: hoisting the count all_to_all ahead of the dispatch
+        # math changes NOTHING observable (the default runs overlapped,
+        # so y_rag above is the overlap=True side)
+        y_seq, i_seq, g_seq = run(cfg, params, x, None, overlap=False)
+        assert np.array_equal(np.asarray(y_rag), np.asarray(y_seq)), kind
+        assert int(i_rag['ep_cx']) == int(i_seq['ep_cx']), kind
+        assert np.array_equal(np.asarray(i_rag['workload']),
+                              np.asarray(i_seq['workload'])), kind
+        assert int(i_rag['dropped']) == int(i_seq['dropped']), kind
+        for lr, ls in zip(jax.tree.leaves(g_rag), jax.tree.leaves(g_seq)):
+            np.testing.assert_allclose(np.asarray(lr), np.asarray(ls),
+                                       rtol=1e-5, atol=1e-6)
+        print(kind, 'cx', cx, 'of C', C, 'overlap parity ok')
     assert 'ep_cx' not in i_ref                    # dense path unchanged
 
     # under a tight capacity the ragged exchange must drop EXACTLY the
@@ -108,6 +126,11 @@ SCRIPT = textwrap.dedent("""
     assert float(jnp.abs(y_rag - y_dns).max()) < 1e-6
     assert np.array_equal(np.asarray(i_rag['workload']),
                           np.asarray(i_dns['workload']))
+    # drops are decided by the same keep-rule either side of the count
+    # hoist: bit-identical under capacity pressure too
+    y_seq, i_seq, _ = run(cfg_t, params_t, x, None, overlap=False)
+    assert np.array_equal(np.asarray(y_rag), np.asarray(y_seq))
+    assert int(i_rag['dropped']) == int(i_seq['dropped'])
     print('EP_RAGGED_OK')
 """)
 
