@@ -265,6 +265,18 @@ def offload_stream_section():
                   f"misses={rec.get('pipelined_fewer_misses')} — per-layer "
                   "inject streaming keeps decisions t+1-fresh with the "
                   "commit amortized across layers; DESIGN.md §9.)")
+    ft = rec.get("fault_tolerance")
+    if ft:
+        print("\n#### Fault tolerance (watchdog + degradation ladder)\n")
+        for line in offload_fault_table(ft):
+            print(line)
+        trans = ", ".join(f"step {s}: {a}→{b}"
+                          for s, a, b in ft.get("transitions", []))
+        print(f"\n(faults={ft['faults']} on mode={ft['mode']}; "
+              + (f"ladder: {trans}; " if trans else "")
+              + "exactness is vs a full-resident reference with fixed "
+              "token injection — streaming faults recover bit-exact, the "
+              "int8 little tier is allclose by design; DESIGN.md §10.)")
 
 
 def offload_stream_table(rows):
@@ -279,6 +291,39 @@ def offload_stream_table(rows):
                    f"| {r['h2d_rows_per_step']:.2f} "
                    f"| {r['h2d_mb_per_step']:.3f} "
                    f"| {r['fallback_rows_per_step']:.2f} |")
+    return out
+
+
+def offload_fault_table(ft):
+    """Markdown table lines for the fault_tolerance record written by
+    ``offload_stream --faults`` (single source of the column layout — the
+    benchmark's stdout uses it too).  One row per trial phase: median
+    ms/step while healthy, under the injected fault (watchdog + ladder
+    reacting), and after the link heals, plus the recovery counters."""
+    pm = ft.get("phase_ms", {})
+    ps = ft.get("phase_steps", {})
+    c = ft.get("counters", {})
+    v = ft.get("verdicts", {})
+    fmt = lambda x: f"{x:.2f}" if x is not None else "—"
+    out = ["| phase | steps | ms/step | exactness |",
+           "|---|---|---|---|"]
+    out.append(f"| healthy | {ps.get('healthy', 0)} "
+               f"| {fmt(pm.get('healthy'))} | bit-exact |")
+    little = ft.get("little_engaged")
+    out.append(f"| fault | {ps.get('fault', 0)} | {fmt(pm.get('fault'))} "
+               f"| {'allclose (little tier)' if little else 'bit-exact'} |")
+    out.append(f"| recovered | {ps.get('recovered', 0)} "
+               f"| {fmt(pm.get('recovered'))} | bit-exact |")
+    ttr = ft.get("time_to_recover_steps")
+    out.append("")
+    out.append(f"recovery: retries={c.get('retries', 0)} "
+               f"deadline_misses={c.get('deadline_misses', 0)} "
+               f"corrupt_caught={c.get('corrupt_caught', 0)} "
+               f"restaged={c.get('restaged_rows', 0)} "
+               f"little_steps={c.get('little_steps', 0)} "
+               f"probes={c.get('probes', 0)} "
+               f"time_to_recover={ttr if ttr is not None else '—'} steps "
+               f"| ok={all(v.values()) if v else '—'}")
     return out
 
 

@@ -65,6 +65,35 @@ TPU_V5E_HOST = HardwareProfile(
 PROFILES = {p.name: p for p in (LOCAL_PC, TPU_V5E_HOST)}
 
 
+def fit_link_constants(sizes_bytes, times_s,
+                       profile: HardwareProfile | None = None):
+    """Guarded least-squares fit of link constants from transfer timings.
+
+    Returns ``(gbps, latency_s, rejected)``.  Noisy CI timings routinely
+    produce degenerate fits — zero/negative per-byte slope (a larger
+    buffer "finished faster") or negative latency.  Instead of clamping
+    those into nonsense constants that then poison ``trans_time`` and
+    every ``DaliConfig`` built from it, a degenerate fit is *rejected*:
+    the returned constants fall back to ``profile`` defaults (or a
+    median-throughput estimate when no profile is given) and ``rejected``
+    is True so callers can record the event.
+    """
+    sizes = np.asarray(sizes_bytes, np.float64)
+    times = np.asarray(times_s, np.float64)
+    per_b, lat = np.nan, np.nan
+    if sizes.size >= 2 and np.ptp(sizes) > 0:
+        A = np.stack([sizes, np.ones_like(sizes)], axis=1)
+        (per_b, lat), *_ = np.linalg.lstsq(A, times, rcond=None)
+    rejected = (not np.isfinite(per_b) or not np.isfinite(lat)
+                or per_b <= 0.0 or lat < 0.0)
+    if rejected:
+        if profile is not None:
+            return profile.link_gbps, profile.link_latency_s, True
+        med = float(np.median(times / np.maximum(sizes, 1.0)))
+        return 1.0 / (max(med, 1e-12) * 1e9), 0.0, True
+    return 1.0 / (float(per_b) * 1e9), float(lat), False
+
+
 @dataclass
 class CostModel:
     """Per-(model, hardware) cost tables for one MoE layer's experts."""
@@ -80,6 +109,9 @@ class CostModel:
     # fitted link overrides (from calibrate_link)
     link_gbps: float | None = None
     link_latency_s: float | None = None
+    # True when calibrate_link measured a degenerate fit and fell back to
+    # the hardware profile's constants instead of baking nonsense in.
+    link_fit_rejected: bool = False
 
     @classmethod
     def for_config(cls, cfg: ModelConfig,
@@ -193,9 +225,7 @@ class CostModel:
                 jax.block_until_ready(jax.device_put(buf, dev))
             ts.append((time.perf_counter() - t0) / repeats)
             sizes.append(buf.nbytes)
-        A = np.stack([np.ones(len(sizes)), np.asarray(sizes, np.float64)], 1)
-        (lat, per_b), *_ = np.linalg.lstsq(A, np.asarray(ts), rcond=None)
-        per_b = max(float(per_b), 1e-12)                 # seconds per byte
+        gbps, lat, rejected = fit_link_constants(sizes, ts, self.profile)
         return dataclasses.replace(
-            self, link_latency_s=float(max(lat, 1e-7)),
-            link_gbps=1.0 / (per_b * 1e9))
+            self, link_latency_s=float(lat), link_gbps=float(gbps),
+            link_fit_rejected=bool(rejected))

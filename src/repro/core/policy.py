@@ -717,6 +717,17 @@ class ComposedPolicy:
     router_type: str = "softmax_topk"
     schedules: bool = field(default=True, init=False)
 
+    def with_dcfg(self, dcfg: DaliConfig) -> "ComposedPolicy":
+        """The same composition over different cost constants — how the
+        serving tier re-solves the assignment when the measured link
+        degrades (expert_store.degraded_policy): swap ``dcfg`` (e.g. the
+        re-fit ``t_trans``, a shrunk ``prefetch_size``), keep every
+        sub-policy.  The state pytree stays structurally identical as
+        long as the scheduling geometry (layers/experts/cache) does, so
+        an existing ``state["dali"]`` carries over across the swap."""
+        import dataclasses
+        return dataclasses.replace(self, dcfg=dcfg)
+
     def init(self, key=None):
         if key is None:
             key = jax.random.PRNGKey(0)

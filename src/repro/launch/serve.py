@@ -22,6 +22,13 @@ t+1 — DESIGN.md §9).  ``--server wave`` selects the
 historical wave scheduler (equal-padded waves, lockstep decode) — the
 compat baseline the serving benchmark compares against; see DESIGN.md
 §3/§7.
+
+``--faults SPEC`` injects link/store faults into the physical offload
+path (serving/faults.py; e.g. ``link_degrade:x12@8-26`` or the bare
+preset name ``transient_stall``) and arms the watchdog + degradation
+ladder (DESIGN.md §10).  ``--check-exact`` re-runs the same workload
+without faults and exits non-zero unless every request's token sequence
+matches — the recovery-is-exact contract for transient faults.
 """
 from __future__ import annotations
 
@@ -66,6 +73,14 @@ def main():
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--cache-ratio", type=float, default=0.5)
     ap.add_argument("--no-dali", action="store_true")
+    ap.add_argument("--faults", default=None,
+                    help="fault schedule for the offload path, e.g. "
+                         "'link_degrade:x12@8-26' or a preset name "
+                         "(link_degrade|transient_stall|read_error|"
+                         "corrupt_rows); requires a physical --offload")
+    ap.add_argument("--check-exact", action="store_true",
+                    help="re-serve the same workload without faults and "
+                         "exit non-zero unless outputs are identical")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -90,29 +105,64 @@ def main():
         res_vecs = jnp.asarray(np.stack(res))
         dali_cfg = default_dali_config(cfg, cache_ratio=args.cache_ratio)
 
-    server = make_server(args.server, params, cfg, batch_size=args.batch,
-                         max_len=args.prompt_len + args.max_new + 2,
-                         dali_cfg=dali_cfg, res_vecs=res_vecs,
-                         policy=policy, offload=args.offload)
-    rng = np.random.default_rng(args.seed + 2)
-    for i in range(args.requests):
-        server.submit(Request(rid=i,
-                              prompt=corpus.sample(rng, args.prompt_len),
-                              max_new_tokens=args.max_new))
-    done = server.run()
+    def serve_once(faults):
+        server = make_server(args.server, params, cfg,
+                             batch_size=args.batch,
+                             max_len=args.prompt_len + args.max_new + 2,
+                             dali_cfg=dali_cfg, res_vecs=res_vecs,
+                             policy=policy, offload=args.offload,
+                             faults=faults)
+        rng = np.random.default_rng(args.seed + 2)
+        for i in range(args.requests):
+            server.submit(Request(rid=i,
+                                  prompt=corpus.sample(rng, args.prompt_len),
+                                  max_new_tokens=args.max_new))
+        return server, server.run()
+
+    server, done = serve_once(args.faults)
     lat = [r.latency for r in done]
     ttft = [r.ttft for r in done if r.first_token_at]
     print(f"== served {len(done)} requests via {args.server} "
-          f"(policy={policy}, offload={args.offload}) | "
+          f"(policy={policy}, offload={args.offload}"
+          + (f", faults={args.faults}" if args.faults else "") + ") | "
           f"{server.metrics.summary()}")
     if server.store is not None:
         st = server.store.stats()
         print(f"   physical offload: streamed {st['h2d_rows']} experts "
               f"({st['h2d_bytes']/1e6:.1f} MB) | miss fallback "
-              f"{st['fallback_rows']} (token,k) slots")
+              f"{st['fallback_rows']} (token,k) slots | "
+              f"fb_rows/req={server.metrics.fallback_rate():.2f}")
+        if args.faults:
+            h = server.store.health()
+            trans = ", ".join(f"step {s}: {a}->{b}"
+                              for s, a, b in h.get("transitions", []))
+            print(f"   resilience: state={h['ladder_state']} "
+                  f"retries={st.get('retries', 0)} "
+                  f"stalls={st.get('stalls', 0)} "
+                  f"read_errors={st.get('read_errors', 0)} "
+                  f"corrupt_caught={st.get('corrupt_caught', 0)} "
+                  f"restaged={st.get('restaged_rows', 0)} "
+                  f"little_steps={st.get('little_steps', 0)}"
+                  + (f" | transitions: {trans}" if trans else ""))
     print(f"   latency p50={np.percentile(lat, 50):.2f}s "
           f"p95={np.percentile(lat, 95):.2f}s"
           + (f" | ttft p50={np.percentile(ttft, 50):.2f}s" if ttft else ""))
+
+    if args.check_exact:
+        if not args.faults:
+            raise SystemExit("--check-exact needs --faults (it compares "
+                             "the faulted run against a clean one)")
+        print("== --check-exact: re-serving the same workload without "
+              "faults")
+        _, clean = serve_once(None)
+        by_rid = {r.rid: r.output for r in clean}
+        bad = [r.rid for r in done if r.output != by_rid.get(r.rid)]
+        if bad:
+            print(f"   MISMATCH: requests {bad} diverged from the "
+                  "fault-free run")
+            raise SystemExit(1)
+        print(f"   exact-output recovery verified: all {len(done)} "
+              "requests bit-identical to the fault-free run")
 
 
 if __name__ == "__main__":

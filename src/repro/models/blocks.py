@@ -59,7 +59,7 @@ def apply_block(params, x, cfg: ModelConfig, kinds, *, positions,
                 moe_capacity: Optional[int] = None,
                 count_overlap: Optional[bool] = None,
                 slots=None, slot_fetch=None, slot_live=None,
-                slot_inject=None):
+                slot_inject=None, slot_little=None):
     mixer_kind, mlp_kind = kinds
     moe_info = None
     new_cache = cache
@@ -113,7 +113,8 @@ def apply_block(params, x, cfg: ModelConfig, kinds, *, positions,
                                     count_overlap=count_overlap,
                                     slots=slots, slot_fetch=slot_fetch,
                                     slot_live=slot_live,
-                                    slot_inject=slot_inject)
+                                    slot_inject=slot_inject,
+                                    slot_little=slot_little)
         else:
             y = apply_mlp(params["mlp"], h, cfg)
             if mixer_kind == "cross":   # gated FFN on VLM cross layers

@@ -92,7 +92,7 @@ def apply_model(params, tokens, cfg: ModelConfig, *, positions=None,
                 count_overlap=None,
                 trace: bool = False, last_logit_only: bool = False,
                 logit_index=None, expert_slots=None, slot_fetch=None,
-                slot_live=None):
+                slot_live=None, slot_little=None):
     """tokens (B, S) int32.  Returns (logits, new_caches, infos) where infos
     is a list (prefix layers) + list (scan stacks, leaves stacked (n_super,
     ...)) of MoE routing observables (None for non-MoE blocks).
@@ -114,7 +114,9 @@ def apply_model(params, tokens, cfg: ModelConfig, *, positions=None,
     without the buffers being sliced through the scan, DESIGN.md §9).
     ``slot_live`` (B·S,) bool marks live batch slots so dead rows never
     trigger miss fallbacks (invariant across layers — a scan constant,
-    not an xs).  ``count_overlap`` threads to apply_moe's EP exchange
+    not an xs).  ``slot_little`` (``ExpertStore.little_view``: resident
+    int8 twins of every (L, E) expert, indexed ``[lid, e]``) feeds the
+    ``fallback="little"`` degradation rung — also a scan constant.  ``count_overlap`` threads to apply_moe's EP exchange
     (hoist the count all_to_all ahead of the dispatch math)."""
     prefix_pat, period_pat, n_super = scan_pattern(cfg)
     B, S = tokens.shape
@@ -149,7 +151,8 @@ def apply_model(params, tokens, cfg: ModelConfig, *, positions=None,
                                  slots=slots_prefix[i],
                                  slot_fetch=slot_fetch,
                                  slot_live=slot_live,
-                                 slot_inject=slot_inject)
+                                 slot_inject=slot_inject,
+                                 slot_little=slot_little)
         new_prefix_caches.append(c)
         infos.append(_trim_info(info, trace))
 
@@ -167,7 +170,8 @@ def apply_model(params, tokens, cfg: ModelConfig, *, positions=None,
                                      slots=s_slices[p],
                                      slot_fetch=slot_fetch,
                                      slot_live=slot_live,
-                                     slot_inject=slot_inject)
+                                     slot_inject=slot_inject,
+                                     slot_little=slot_little)
             x = hint(x, "batch", "res_seq", "embed")
             new_cs.append(c)
             step_infos.append(_trim_info(info, trace))

@@ -35,6 +35,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import io_callback
 
 from .config import ModelConfig, MoEConfig
 from .layers import _ACTS, dense_init, init_mlp, apply_mlp
@@ -170,7 +171,7 @@ def grouped_expert_ffn(params, xf, idx, gates, cfg: ModelConfig):
 
 
 def slot_expert_ffn(slots, slot_fetch, xf, idx, gates, cfg: ModelConfig,
-                    live=None, slot_inject=None):
+                    live=None, slot_inject=None, slot_little=None):
     """Physical-offload decode path: weights come from the device slot
     pool instead of a full (E, ...) stack (serving/expert_store.py).
 
@@ -184,7 +185,12 @@ def slot_expert_ffn(slots, slot_fetch, xf, idx, gates, cfg: ModelConfig,
         store (pure_callback H2D) and the FFN stays on device, so the
         output is bit-identical to the full-resident gather;
       * fallback "host" — missing rows' FFN executes on the host (CPU
-        tier) and only (d,)-sized outputs cross back.
+        tier) and only (d,)-sized outputs cross back;
+      * fallback "little" — missing rows read ``slot_little``, the
+        always-resident int8 twin pool of EVERY (L, E) expert
+        (ExpertStore.little_view, DESIGN.md §10): a pure device
+        gather + dequantize, no callback and no cond, so a persistent
+        miss costs int8 quality instead of a host round trip.
 
     ``live`` (T,) bool marks real tokens (continuous batching: live batch
     slots).  Dead rows never count as misses — a retired slot's garbage
@@ -219,7 +225,33 @@ def slot_expert_ffn(slots, slot_fetch, xf, idx, gates, cfg: ModelConfig,
         wu = jnp.where(use_inj, slot_inject["up"][irow], wu)
         wd = jnp.where(use_inj, slot_inject["down"][irow], wd)
     any_miss = jnp.any(~hit)
-    if slot_fetch.fallback == "host":
+    if slot_fetch.fallback == "little":
+        if slot_little is None:
+            raise ValueError('fallback="little" needs the slot_little '
+                             "twin pool (ExpertStore.little_view())")
+        # the twins are read fully in-graph, so miss accounting can't
+        # ride a weights callback like the other tiers — io_callback is
+        # effectful (never DCEd) and only fires on actual-miss steps
+        jax.lax.cond(
+            any_miss,
+            lambda h: io_callback(slot_fetch.little_miss_cb,
+                                  jax.ShapeDtypeStruct((), jnp.int32), h),
+            lambda h: jnp.int32(0), hit)
+        lid = slots["lid"]
+        dt = wg.dtype
+
+        def deq(qk, sk):
+            q = slot_little[qk][lid, flat_e].astype(jnp.float32)
+            s = slot_little[sk][lid, flat_e]       # (T*K, 1, out) scales
+            return (q * s).astype(dt)
+
+        hw = hit[:, None, None]
+        ys = _grouped_ffn_rows(
+            xf,
+            jnp.where(hw, wg, deq("gate_q", "gate_s")),
+            jnp.where(hw, wu, deq("up_q", "up_s")),
+            jnp.where(hw, wd, deq("down_q", "down_s")), cfg)
+    elif slot_fetch.fallback == "host":
         hm = hit[:, None]
         ys = _grouped_ffn_rows(xf, jnp.where(hit[:, None, None], wg, 0),
                                jnp.where(hit[:, None, None], wu, 0),
@@ -302,7 +334,7 @@ def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None,
               force_exchange: Optional[str] = None,
               count_overlap: Optional[bool] = None,
               slots=None, slot_fetch=None, slot_live=None,
-              slot_inject=None):
+              slot_inject=None, slot_little=None):
     """Returns (y, info) where info carries DALI's routing observables.
 
     ``valid`` (T,) bool marks real tokens (None = all real): padded tokens
@@ -397,7 +429,8 @@ def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None,
             # physical offload: weights from the device slot pool, misses
             # from the host tier (serving/expert_store.py)
             y = slot_expert_ffn(slots, slot_fetch, xf, idx, gates, cfg,
-                                live=slot_live, slot_inject=slot_inject)
+                                live=slot_live, slot_inject=slot_inject,
+                                slot_little=slot_little)
         else:
             y = grouped_expert_ffn(params, xf, idx, gates, cfg)
         counts = _workload_counts(idx.reshape(-1), E, vrep)

@@ -87,10 +87,31 @@ host tier:
 
 Both callbacks sit under ``lax.cond(any_miss, ...)`` so a fully-resident
 step never pays a host round trip.
+
+  * ``fallback="little"``: misses read an ALWAYS-RESIDENT int8 twin of
+    every (L, E) expert (MoBiLE's "little" experts, DESIGN.md §10) — a
+    pure device gather + dequant, no host callback, no cond.  Quality
+    degrades (int8 rounding) but latency does not; this is the bottom
+    rung of the degradation ladder.
+
+Robustness (DESIGN.md §10): when constructed with ``faults=...`` the
+store wraps its host gathers and H2D transfers with a seeded
+:class:`~repro.serving.faults.FaultInjector`, times every staging
+transfer against a :class:`~repro.serving.faults.LinkWatchdog` deadline
+budgeted from the cost model's link constants, checksums staged rows
+against the host store, and drives a
+:class:`~repro.serving.faults.DegradationLadder`:
+
+  healthy → degraded (halve the move budget; the serving tier swaps in
+  a re-solved policy with the re-fit ``t_trans`` and zero prefetch) →
+  little (streaming suspended, misses served by the int8 twins) →
+  healthy again once an expert-sized health probe sees the link heal.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import threading
 import time
 
 import numpy as np
@@ -98,10 +119,15 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.cost_model import CostModel
 from repro.models.config import ModelConfig, scan_pattern
+from repro.serving.faults import (DEGRADED, HEALTHY, LITTLE,
+                                  DegradationLadder, FaultInjector,
+                                  HostReadError, LinkWatchdog,
+                                  TransientFault)
 
 
-FALLBACKS = ("fetch", "host")
+FALLBACKS = ("fetch", "host", "little")
 STORE_MODES = ("blocking", "overlap", "pipelined")
 
 
@@ -123,6 +149,47 @@ def _next_pow2(n: int) -> int:
     while b < n:
         b *= 2
     return b
+
+
+# --------------------------------------------------------------------------
+# Row checksums (host truth vs. staged device buffers)
+# --------------------------------------------------------------------------
+# Cheap per-row integrity check: xor-fold of the raw bit pattern.  The
+# NumPy and jax versions reduce the SAME uint16/uint32 words in the SAME
+# uint32 domain, so a staged row matches its host source bit-for-bit iff
+# the checksums match — float NaN payloads and -0.0 included.
+
+def _row_checksums_np(*arrs) -> np.ndarray:
+    """(R,) uint32 xor-fold over each leading-axis row of all arrays."""
+    out = None
+    for a in arrs:
+        bits = np.uint16 if a.dtype.itemsize == 2 else np.uint32
+        v = np.ascontiguousarray(a).reshape(a.shape[0], -1).view(bits)
+        x = np.bitwise_xor.reduce(v.astype(np.uint32), axis=1)
+        out = x if out is None else out ^ x
+    return out
+
+
+def _row_bits(a):
+    bits = jnp.uint16 if a.dtype.itemsize == 2 else jnp.uint32
+    v = jax.lax.bitcast_convert_type(a, bits)
+    flat = v.reshape(a.shape[0], -1).astype(jnp.uint32)
+    return jax.lax.reduce(flat, np.uint32(0), jax.lax.bitwise_xor, (1,))
+
+
+@jax.jit
+def _staged_checksum(sg, su, sd):
+    """(R,) uint32 per-row checksum of a staged (gate, up, down) triple."""
+    return _row_bits(sg) ^ _row_bits(su) ^ _row_bits(sd)
+
+
+@jax.jit
+def _rowsbuf_checksum(rowsbuf):
+    """(Q,) uint32 per-row checksum of a packed (3, Q, d*f) rows buffer."""
+    bits = jnp.uint16 if rowsbuf.dtype.itemsize == 2 else jnp.uint32
+    v = jax.lax.bitcast_convert_type(rowsbuf, bits)
+    flat = v.reshape(3, rowsbuf.shape[1], -1).astype(jnp.uint32)
+    return jax.lax.reduce(flat, np.uint32(0), jax.lax.bitwise_xor, (0, 2))
 
 
 def moe_layer_layout(cfg: ModelConfig):
@@ -231,7 +298,10 @@ class ExpertStore:
 
     def __init__(self, params, cfg: ModelConfig, n_slots: int,
                  max_moves: int = 4, fallback: str = "fetch",
-                 mode: str = "overlap"):
+                 mode: str = "overlap", faults=None, cost_model=None,
+                 watchdog=None, ladder=None, little=None, verify=None,
+                 max_retries: int = 3, retry_backoff_s: float = 2e-3,
+                 probe_interval: int = 3, seed: int = 0):
         if cfg.moe is None:
             raise ValueError("ExpertStore needs an MoE architecture")
         if fallback not in FALLBACKS:
@@ -274,14 +344,59 @@ class ExpertStore:
             raise ValueError(f"n_slots={n_slots} exceeds n_experts={self.E}")
         self.expert_bytes = int(sum(self.host[k][0, 0].nbytes
                                     for k in self.host))
-        # telemetry (host-side, best-effort under callback caching)
-        self.fallback_rows = 0            # (token, k) slots served by misses
-        self.fallback_fetches = 0         # experts demand-fetched
-        self.h2d_rows = 0                 # experts streamed into the pool
-        self.h2d_bytes = 0
-        self.stage_s = 0.0                # host time in stage()/inject build
-        self.commit_s = 0.0               # host time in commit dispatch/wait
+        # telemetry: a single lock-guarded counter dict.  pure_callback
+        # targets (fetch_weights_cb / host_ffn_cb) mutate counters from
+        # the runtime's callback thread, so every bump goes through
+        # _bump(); the legacy attribute names (store.h2d_rows, ...) stay
+        # readable as properties.  stats() returns monotonic totals
+        # (benchmarks snapshot-diff them); drain() returns the deltas
+        # since the last drain and resets that baseline.
+        self._tel_lock = threading.Lock()
+        self._tel = {
+            "fallback_rows": 0,      # (token, k) slots served by misses
+            "fallback_fetches": 0,   # experts demand-fetched
+            "h2d_rows": 0,           # experts streamed into the pool
+            "h2d_bytes": 0,
+            "stage_s": 0.0,          # host time in stage()/inject build
+            "commit_s": 0.0,         # host time in commit dispatch/wait
+            "retries": 0,            # transient-fault retries that fired
+            "stalls": 0,             # injected stage stalls hit
+            "read_errors": 0,        # injected host read errors hit
+            "stage_aborts": 0,       # plans dropped after retry exhaustion
+            "corrupt_caught": 0,     # rows the checksum verify flagged
+            "restaged_rows": 0,      # flagged rows re-gathered + re-shipped
+            "probes": 0,             # health-probe transfers issued
+            "little_steps": 0,       # steps served with streaming suspended
+        }
+        self._drained = dict(self._tel)
         self._cur = np.full((self.n_layers, n_slots), -1, np.int32)
+        # -- robustness seam (DESIGN.md §10) -------------------------------
+        self.injector = (faults if isinstance(faults, FaultInjector)
+                         else FaultInjector(faults, seed=seed)
+                         if faults is not None else None)
+        self.max_retries = int(max_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.probe_interval = max(1, int(probe_interval))
+        if watchdog is None and self.injector is not None:
+            cm = cost_model or CostModel.for_config(cfg)
+            gbps = (cm.link_gbps if cm.link_gbps is not None
+                    else cm.profile.link_gbps)
+            lat = (cm.link_latency_s if cm.link_latency_s is not None
+                   else cm.profile.link_latency_s)
+            watchdog = LinkWatchdog(self.expert_bytes, gbps, lat)
+        self.watchdog = watchdog
+        if ladder is None and self.watchdog is not None:
+            ladder = DegradationLadder(self.watchdog,
+                                       enable_little=little is not False)
+        self.ladder = ladder
+        self._verify = bool(verify if verify is not None
+                            else self.injector is not None)
+        self._move_cap = None        # max_moves override while DEGRADED
+        self._suspended = False      # streaming off while LITTLE
+        self._steps_since_obs = 0
+        self._little = None
+        if little is True or fallback == "little":
+            self._build_little()
         # ping-pong generation state: the spare pool buffers (donated in
         # place by the next step_update) and the plan rows the spare is
         # missing relative to the logical pool state (an (n, 3) int32 of
@@ -316,6 +431,194 @@ class ExpertStore:
                                      donate_argnums=(0, 1, 2))
         if self.mode == "pipelined":
             self._prewarm_pipeline()
+
+    # -- telemetry ---------------------------------------------------------
+
+    def _bump(self, name: str, v=1):
+        with self._tel_lock:
+            self._tel[name] += v
+
+    def stats(self) -> dict:
+        """Monotonic counter totals (numeric only — benchmarks diff
+        snapshots of this dict)."""
+        with self._tel_lock:
+            out = dict(self._tel)
+        out.update(expert_bytes=self.expert_bytes, n_slots=self.n_slots,
+                   n_layers=self.n_layers)
+        return out
+
+    def drain(self) -> dict:
+        """Counter deltas since the previous drain (snapshot-and-reset).
+        Safe against concurrent pure_callback bumps: the baseline moves
+        under the same lock the bumps take, so every increment lands in
+        exactly one drain window — this is what lets the servers report
+        per-request fallback rates without double- or under-counting."""
+        with self._tel_lock:
+            out = {k: self._tel[k] - self._drained[k] for k in self._tel}
+            self._drained = dict(self._tel)
+        return out
+
+    def health(self) -> dict:
+        """Ladder / watchdog view for reports (non-numeric OK here)."""
+        out = {"ladder_state": self.ladder.state if self.ladder else HEALTHY,
+               "transitions": list(self.ladder.transitions)
+               if self.ladder else [],
+               "suspended": self._suspended,
+               "move_cap": self._move_cap}
+        if self.watchdog is not None:
+            out.update(link_gbps=self.watchdog.gbps,
+                       link_latency_s=self.watchdog.latency_s,
+                       deadline_misses=self.watchdog.deadline_misses)
+        return out
+
+    # -- robustness seam (DESIGN.md §10) -----------------------------------
+
+    def _observe(self, nbytes: int, seconds: float):
+        if self.watchdog is not None:
+            self.watchdog.observe(nbytes, seconds)
+        self._steps_since_obs = 0
+
+    def _fault_sleep(self, nbytes: int):
+        """Model an injected link slowdown: pad the just-finished
+        transfer to ``factor ×`` the healthy baseline.  The baseline is
+        the watchdog's calibrated expectation (floored at its observed
+        median) so the slowdown is detectable relative to the deadline
+        regardless of how fast the actual machine's link is."""
+        if self.injector is None or self.watchdog is None:
+            return
+        k = self.injector.link_factor()
+        if k > 1.0:
+            base = max(self.watchdog.expected_s(nbytes),
+                       self.watchdog.floor_s)
+            time.sleep(base * (k - 1.0))
+
+    def _guard_transient(self, what: str) -> bool:
+        """Run the injected transient checks with bounded retry+backoff.
+        Returns True once clear; False when retries are exhausted — the
+        caller then SKIPS this step's plan, which is always safe (the
+        mirror has not advanced, so misses fall back correctly)."""
+        if self.injector is None:
+            return True
+        delay = self.retry_backoff_s
+        for _ in range(self.max_retries + 1):
+            try:
+                self.injector.maybe_stall()
+                self.injector.maybe_read_error()
+                return True
+            except HostReadError:
+                self._bump("read_errors")
+            except TransientFault:
+                self._bump("stalls")
+            self._bump("retries")
+            time.sleep(delay)
+            delay *= 2.0
+        self._bump("stage_aborts")
+        return False
+
+    def _probe(self):
+        """One expert-sized H2D transfer, timed under the injected link
+        factor — keeps the watchdog observed when regular staging is
+        idle or suspended.  Expert-sized on purpose: a token-sized probe
+        would be latency-dominated and a bandwidth slowdown would hide
+        inside the deadline floor."""
+        t0 = time.perf_counter()
+        buf = (self.host["gate"][0, :1], self.host["up"][0, :1],
+               self.host["down"][0, :1])
+        jax.block_until_ready(jax.device_put(buf))
+        self._fault_sleep(self.expert_bytes)
+        self._bump("probes")
+        self._observe(self.expert_bytes, time.perf_counter() - t0)
+
+    def _health_tick(self):
+        """Once per serving step, from ``pre_step``: advance the injector
+        clock, keep the watchdog fed (probe when staging has gone quiet
+        or is suspended), and drive the ladder.  Ladder transitions only
+        flip cheap store-side switches here — the serving tier reacts to
+        the state change by swapping decode variants (steps.py)."""
+        if self.injector is not None:
+            self.injector.tick()
+        if self.watchdog is None or self.ladder is None:
+            return
+        self._steps_since_obs += 1
+        # probes fire on the observation cadence whether staging is idle
+        # or suspended — NOT every suspended step, or the little tier
+        # would pay a (fault-padded) transfer per step, defeating it
+        if self._steps_since_obs >= self.probe_interval:
+            self._probe()
+        if self._suspended:
+            self._bump("little_steps")
+        step = (self.injector.step if self.injector is not None
+                else len(self.watchdog._samples))
+        tr = self.ladder.on_step(step)
+        if tr is None:
+            return
+        _, to = tr
+        if to == DEGRADED:
+            self._move_cap = max(1, self.max_moves // 2)
+        elif to == LITTLE:
+            self._suspended = True
+        elif to == HEALTHY:
+            self._move_cap = None
+            self._suspended = False
+
+    def _effective_moves(self) -> int:
+        return (self.max_moves if self._move_cap is None
+                else min(self.max_moves, self._move_cap))
+
+    def degraded_dcfg(self, dcfg):
+        """The DaliConfig the serving tier re-solves with while DEGRADED:
+        ``t_trans`` from the watchdog's online re-fit of the link as it
+        is NOW (never below the healthy value) and a zeroed prefetch
+        budget — the paper's workload-aware assignment reacting to
+        hardware state (HybriMoE-style re-balancing)."""
+        t_deg = dcfg.t_trans
+        if self.watchdog is not None:
+            gbps, lat, _rejected = self.watchdog.refit()
+            t_deg = lat + self.expert_bytes / (gbps * 1e9)
+        return dataclasses.replace(dcfg,
+                                   t_trans=max(float(t_deg), dcfg.t_trans),
+                                   prefetch_size=0)
+
+    def degraded_policy(self, policy):
+        """``policy`` with its DaliConfig swapped for the degraded one
+        (no-op for policies without cost constants, e.g. "none")."""
+        if not hasattr(policy, "with_dcfg"):
+            return policy
+        return policy.with_dcfg(self.degraded_dcfg(policy.dcfg))
+
+    # -- the little tier (MoBiLE int8 twins, DESIGN.md §10) ----------------
+
+    def _build_little(self):
+        """Quantize EVERY (L, E) expert to a per-output-column symmetric
+        int8 twin and park it on device.  Layout matches the host store
+        (``*_q`` int8 same shape, ``*_s`` f32 scales broadcast over the
+        contraction axis), so the little tier costs ~dtype_bytes/1 of
+        the full store's bytes but is always resident — a persistent
+        miss becomes an int8-quality FFN instead of a host round trip."""
+        if self._little is not None:
+            return
+
+        def q(w):
+            s = np.max(np.abs(w.astype(np.float32)), axis=-2,
+                       keepdims=True) / 127.0
+            s = np.maximum(s, 1e-8).astype(np.float32)
+            qv = np.clip(np.round(w.astype(np.float32) / s),
+                         -127, 127).astype(np.int8)
+            return qv, s
+
+        out = {}
+        for k in ("gate", "up", "down"):
+            qv, s = q(self.host[k])
+            out[k + "_q"] = jax.device_put(qv)
+            out[k + "_s"] = jax.device_put(s)
+        self._little = out
+
+    def little_view(self):
+        """The resident int8 twin pool for ``slot_expert_ffn``'s
+        ``fallback="little"`` branch (closed over by the jitted decode
+        as constants, like the pipelined inject buffers)."""
+        self._build_little()
+        return self._little
 
     # -- device state ------------------------------------------------------
 
@@ -431,14 +734,15 @@ class ExpertStore:
         e = np.asarray(flat_e)
         miss = ~np.asarray(hit)
         rows = np.nonzero(miss)[0]
+        self._guard_transient("fetch")   # injected read errors retry here
         g = np.zeros((e.shape[0], self.d, self.f), self.dtype)
         u = np.zeros_like(g)
         dn = np.zeros((e.shape[0], self.f, self.d), self.dtype)
         g[rows] = self.host["gate"][l, e[rows]]
         u[rows] = self.host["up"][l, e[rows]]
         dn[rows] = self.host["down"][l, e[rows]]
-        self.fallback_rows += len(rows)
-        self.fallback_fetches += len(set(e[rows].tolist()))
+        self._bump("fallback_rows", len(rows))
+        self._bump("fallback_fetches", len(set(e[rows].tolist())))
         return g, u, dn
 
     def host_ffn_cb(self, lid, xf, flat_e, hit):
@@ -451,14 +755,25 @@ class ExpertStore:
         K = e.shape[0] // xf.shape[0]
         ys = np.zeros((e.shape[0], self.d), xf.dtype)
         rows = np.nonzero(~np.asarray(hit))[0]
+        self._guard_transient("host-ffn")
         for r in rows:
             x = xf[r // K].astype(np.float32)
             wg = self.host["gate"][l, e[r]].astype(np.float32)
             wu = self.host["up"][l, e[r]].astype(np.float32)
             wd = self.host["down"][l, e[r]].astype(np.float32)
             ys[r] = ((self._act(x @ wg) * (x @ wu)) @ wd).astype(ys.dtype)
-        self.fallback_rows += len(rows)
+        self._bump("fallback_rows", len(rows))
         return ys
+
+    def little_miss_cb(self, hit):
+        """io_callback target for the in-graph little tier: the twins are
+        read without any host round trip, so miss accounting arrives as
+        this effect-only counter bump (moe.py fires it on miss steps)."""
+        h = np.asarray(hit)
+        n = int(h.size - np.count_nonzero(h))
+        if n:
+            self._bump("fallback_rows", n)
+        return np.int32(n)
 
     # -- streaming updates -------------------------------------------------
 
@@ -596,6 +911,10 @@ class ExpertStore:
         reuses the cached inject and costs zero dispatches."""
         t0 = time.perf_counter()
         L, S = self.n_layers, self.n_slots
+        # suspended (LITTLE rung) or retries exhausted: drop the plan —
+        # the mirror has not advanced, so the decode just sees misses
+        if self._suspended or not self._guard_transient("pipeline-stage"):
+            target = None
         n = 0
         if target is not None:
             new_cur, ins_e, ins_s, valid = self.plan(target)
@@ -603,7 +922,7 @@ class ExpertStore:
         if n == 0:
             if self._idle_inj is None:
                 self._idle_inj = self._build_inj()
-            self.stage_s += time.perf_counter() - t0
+            self._bump("stage_s", time.perf_counter() - t0)
             return dict(off, inject=self._idle_inj)
         self._cur = new_cur
         lr, mc = np.nonzero(valid)
@@ -642,20 +961,49 @@ class ExpertStore:
             for k, h in enumerate((self.host["gate"], self.host["up"],
                                    self.host["down"])):
                 rowsbuf[k, :take] = h[clr, cee].reshape(take, -1)
+            truth = (_row_checksums_np(rowsbuf[0], rowsbuf[1], rowsbuf[2])
+                     if self._verify else None)
+            if self.injector is not None:
+                self.injector.corrupt({"gate": rowsbuf[0],
+                                       "up": rowsbuf[1],
+                                       "down": rowsbuf[2]}, take)
             meta = np.concatenate([self._cur.astype(np.int32),
                                    self._inj_of()], axis=1)
+            tc0 = time.perf_counter()
+            rows_dev = jax.device_put(rowsbuf)
+            if self._verify:
+                rows_dev = self._verify_rowsbuf(rows_dev, rowsbuf, truth,
+                                                take, clr, cee)
+            if self.watchdog is not None:
+                jax.block_until_ready(rows_dev)
+                self._fault_sleep(rowsbuf.nbytes)
+                self._observe(rowsbuf.nbytes, time.perf_counter() - tc0)
             buf_g, buf_u, buf_d = self._inject_buffers()
             buf_g, buf_u, buf_d, cur_d, inj_of_d = self._stage_inj_jit(
-                buf_g, buf_u, buf_d, pos, rowsbuf, meta)
+                buf_g, buf_u, buf_d, pos, rows_dev, meta)
             self._inject_bufs = (buf_g, buf_u, buf_d)
             done += take
-            self.h2d_bytes += Q * self.expert_bytes
+            self._bump("h2d_bytes", Q * self.expert_bytes)
         inj = {"gate": buf_g, "up": buf_u, "down": buf_d,
                "inj_of": inj_of_d, "cur": cur_d}
         self._idle_inj = inj
-        self.h2d_rows += n
-        self.stage_s += time.perf_counter() - t0
+        self._bump("h2d_rows", n)
+        self._bump("stage_s", time.perf_counter() - t0)
         return dict(off, inject=inj)
+
+    def _verify_rowsbuf(self, rows_dev, rowsbuf, truth, take, clr, cee):
+        """Checksum the device copy of a pipelined rows chunk against the
+        host-store truth; re-gather and re-ship any corrupted rows."""
+        got = np.asarray(_rowsbuf_checksum(rows_dev))
+        bad = np.nonzero(got[:take] != truth[:take])[0]
+        if len(bad) == 0:
+            return rows_dev
+        self._bump("corrupt_caught", len(bad))
+        for k, h in enumerate((self.host["gate"], self.host["up"],
+                               self.host["down"])):
+            rowsbuf[k, bad] = h[clr[bad], cee[bad]].reshape(len(bad), -1)
+        self._bump("restaged_rows", len(bad))
+        return jax.device_put(rowsbuf)
 
     def _inj_of(self):
         """(L, E) expert→buffer-row map over the live unfolded rows."""
@@ -687,15 +1035,17 @@ class ExpertStore:
         # non-inject generation selector reads
         off = dict(off, gate=pool_g, up=pool_u, down=pool_d,
                    cur=jax.device_put(self._cur.copy()))
-        self.commit_s += time.perf_counter() - t0
+        self._bump("commit_s", time.perf_counter() - t0)
         return off
 
     def plan(self, target):
         """Lower a (L, E) bool target against the HOST slot-table mirror
         (NumPy twin; the in-graph ``lower_slot_plan`` is parity-tested
         against it).  Does NOT mutate the mirror — ``step_update`` does,
-        once the plan is actually issued."""
-        return lower_slot_plan_np(self._cur, target, self.max_moves)
+        once the plan is actually issued.  While the ladder is DEGRADED
+        the move budget is halved (``_move_cap``) so a slow link ships
+        fewer rows per step."""
+        return lower_slot_plan_np(self._cur, target, self._effective_moves())
 
     def stage(self, target) -> bool:
         """Plan one step's pool update toward ``target`` (L, E) bool (the
@@ -714,12 +1064,16 @@ class ExpertStore:
             # a second stage would advance the host mirror past what ever
             # reaches the device — a silent permanent mirror/pool split
             raise RuntimeError("stage() called twice without commit()")
+        # suspended (LITTLE rung) or retries exhausted: skip the plan —
+        # nothing has mutated yet, so skipping is always safe
+        if self._suspended or not self._guard_transient("stage"):
+            return False
         t0 = time.perf_counter()
         new_cur, ins_e, ins_s, valid = self.plan(target)
         lay_v, mv = np.nonzero(valid)
         n = len(lay_v)
         if n == 0:
-            self.stage_s += time.perf_counter() - t0
+            self._bump("stage_s", time.perf_counter() - t0)
             return False                     # pool already at target
         rows = np.stack([lay_v, ins_s[lay_v, mv], ins_e[lay_v, mv]],
                         axis=1).astype(np.int32)
@@ -746,14 +1100,37 @@ class ExpertStore:
         sg = self.host["gate"][lay, exp]
         su = self.host["up"][lay, exp]
         sd = self.host["down"][lay, exp]
+        truth = (_row_checksums_np(sg, su, sd)
+                 if self._verify else None)
+        if self.injector is not None:
+            self.injector.corrupt({"gate": sg, "up": su, "down": sd}, m)
+        nbytes = sg.nbytes + su.nbytes + sd.nbytes
+        tt0 = time.perf_counter()
         self._staged = jax.device_put((sg, su, sd, lay, slot, exp, ok))
+        if self._verify:
+            got = np.asarray(_staged_checksum(*self._staged[:3]))
+            bad = np.nonzero(got[:m] != truth[:m])[0]
+            if len(bad):
+                self._bump("corrupt_caught", len(bad))
+                # re-gather the flagged rows from the host store and
+                # re-ship the buffers — the host store is the truth
+                sg[bad] = self.host["gate"][lay[bad], exp[bad]]
+                su[bad] = self.host["up"][lay[bad], exp[bad]]
+                sd[bad] = self.host["down"][lay[bad], exp[bad]]
+                self._staged = jax.device_put(
+                    (sg, su, sd, lay, slot, exp, ok))
+                self._bump("restaged_rows", len(bad))
+        if self.watchdog is not None:
+            jax.block_until_ready(self._staged)
+            self._fault_sleep(nbytes)
+            self._observe(nbytes, time.perf_counter() - tt0)
         self._staged_rows = rows
         self._cur = new_cur
-        self.h2d_rows += n
+        self._bump("h2d_rows", n)
         # actual bus traffic: the full staged buffer crosses the link —
         # new rows, spare-lag re-applies AND the pow2 padding rows
-        self.h2d_bytes += R * self.expert_bytes
-        self.stage_s += time.perf_counter() - t0
+        self._bump("h2d_bytes", R * self.expert_bytes)
+        self._bump("stage_s", time.perf_counter() - t0)
         return True
 
     def commit(self, off, blocking: bool = False):
@@ -771,6 +1148,7 @@ class ExpertStore:
         if self._staged is None:
             return off
         t0 = time.perf_counter()
+        staged_nbytes = sum(int(a.nbytes) for a in self._staged[:3])
         spare = self._spare
         pool_g, pool_u, pool_d, cur = self._apply_jit(
             spare["gate"], spare["up"], spare["down"], spare["cur"],
@@ -785,7 +1163,11 @@ class ExpertStore:
         new_off = dict(off, gate=pool_g, up=pool_u, down=pool_d, cur=cur)
         if blocking:
             jax.block_until_ready(new_off)
-        self.commit_s += time.perf_counter() - t0
+            if (self.watchdog is not None
+                    and time.perf_counter() - t0
+                    > self.watchdog.deadline(staged_nbytes)):
+                self.watchdog.deadline_misses += 1
+        self._bump("commit_s", time.perf_counter() - t0)
         return new_off
 
     def step_update(self, off, target, blocking: bool = False):
@@ -811,7 +1193,12 @@ class ExpertStore:
         stalling); "pipelined" → fold the previous step's inject into
         the pool, then stage THIS step's plan as fresh inject buffers
         riding ``off["inject"]`` — the decode about to dispatch reads
-        the plan through the per-layer seam, t+1 fresh."""
+        the plan through the per-layer seam, t+1 fresh.
+
+        Also the robustness heartbeat: the injector clock, health probe
+        and degradation ladder advance here, once per step, in every
+        mode (``_health_tick``)."""
+        self._health_tick()
         if mode == "blocking":
             if target is None:
                 return off
@@ -835,13 +1222,20 @@ class ExpertStore:
         return (np.asarray(state["dali"]["resident"])
                 | np.asarray(tel["prefetched"]))
 
-    def stats(self) -> dict:
-        return {"h2d_rows": self.h2d_rows, "h2d_bytes": self.h2d_bytes,
-                "fallback_rows": self.fallback_rows,
-                "fallback_fetches": self.fallback_fetches,
-                "stage_s": self.stage_s, "commit_s": self.commit_s,
-                "expert_bytes": self.expert_bytes,
-                "n_slots": self.n_slots, "n_layers": self.n_layers}
+
+def _counter_property(name):
+    def get(self):
+        with self._tel_lock:
+            return self._tel[name]
+    get.__doc__ = f"Legacy read-only alias for stats()['{name}']."
+    return property(get)
+
+
+# the pre-drain attribute names stay readable (tests/benchmarks use them)
+for _n in ("fallback_rows", "fallback_fetches", "h2d_rows", "h2d_bytes",
+           "stage_s", "commit_s"):
+    setattr(ExpertStore, _n, _counter_property(_n))
+del _n
 
 
 def strip_expert_params(params, cfg: ModelConfig):

@@ -1,0 +1,378 @@
+"""Fault injection, link watchdog, and the degradation ladder.
+
+This module is the robustness seam around the physical offload path:
+
+* :class:`FaultInjector` — a seeded, schedule-driven injector that the
+  :class:`~repro.serving.expert_store.ExpertStore` consults around its
+  host-side gathers and H2D transfers.  Faults are *deterministic*
+  (driven by the store's step counter, not wall clock) so tests and CI
+  can pin exact recovery behaviour.
+* :class:`LinkWatchdog` — stage/commit deadline detection budgeted from
+  the cost model's link constants, with an online re-fit of
+  (gbps, latency) from observed stage timings.
+* :class:`DegradationLadder` — the recoverable reaction state machine:
+  healthy -> degraded (shrunk prefetch, re-solved assignment with the
+  degraded t_trans) -> little (resident int8 twins) -> healthy again
+  once the link heals.
+
+Nothing in here touches jax; everything runs at Python level inside the
+store's hook protocol (`pre_step` / `post_dispatch`), which is also why
+it composes identically across the blocking / overlap / pipelined modes.
+"""
+
+from __future__ import annotations
+
+import re
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cost_model import fit_link_constants
+
+
+class TransientFault(Exception):
+    """A recoverable fault raised by the injector (stall / timeout)."""
+
+
+class HostReadError(TransientFault):
+    """Injected host-store read error (e.g. mmap page-in failure)."""
+
+
+FAULT_KINDS = ("link_degrade", "transient_stall", "read_error", "corrupt_rows")
+
+# Shorthand presets so `--faults link_degrade` works without a schedule.
+PRESETS = {
+    "link_degrade": "link_degrade:x12@8-26",
+    "transient_stall": "transient_stall@5-7",
+    "read_error": "read_error@5-6",
+    "corrupt_rows": "corrupt_rows@4-7",
+}
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One scheduled fault: `kind` active on steps [start, stop)."""
+
+    kind: str
+    start: int = 0
+    stop: int = 1 << 30
+    factor: float = 8.0  # link slowdown multiplier (link_degrade only)
+
+    def active(self, step: int) -> bool:
+        return self.start <= step < self.stop
+
+
+_SPEC_RE = re.compile(r"(\w+)(?::x([0-9.]+))?(?:@(\d+)(?:-(\d+))?)?")
+
+
+def parse_faults(spec) -> List[FaultSpec]:
+    """Parse a fault schedule string into :class:`FaultSpec` list.
+
+    Grammar (comma-separated items)::
+
+        kind[:xFACTOR][@START[-STOP]]
+
+    e.g. ``link_degrade:x12@8-26,transient_stall@5-7``.  A bare kind
+    with no schedule uses the preset from :data:`PRESETS`.  Already
+    parsed lists pass through unchanged.
+    """
+    if spec is None:
+        return []
+    if isinstance(spec, FaultSpec):
+        return [spec]
+    if isinstance(spec, (list, tuple)):
+        out: List[FaultSpec] = []
+        for s in spec:
+            out.extend(parse_faults(s))
+        return out
+    text = str(spec).strip()
+    if not text:
+        return []
+    specs: List[FaultSpec] = []
+    for item in text.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        if item in PRESETS:
+            item = PRESETS[item]
+        m = _SPEC_RE.fullmatch(item)
+        if m is None:
+            raise ValueError(f"bad fault spec item: {item!r}")
+        kind, factor, start, stop = m.groups()
+        if kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {kind!r}; expected one of {FAULT_KINDS}"
+            )
+        start_i = int(start) if start is not None else 0
+        stop_i = int(stop) if stop is not None else (
+            start_i + 1 if start is not None else 1 << 30
+        )
+        specs.append(
+            FaultSpec(
+                kind=kind,
+                start=start_i,
+                stop=stop_i,
+                factor=float(factor) if factor is not None else 8.0,
+            )
+        )
+    return specs
+
+
+class FaultInjector:
+    """Seeded, schedule-driven fault source consulted by the store.
+
+    The store calls :meth:`tick` once at the top of each `pre_step`, then
+    the various `maybe_*` hooks from inside its gather/H2D path.  Stall
+    and read-error faults fire *once per (spec, step)* so a bounded
+    retry always succeeds — persistent trouble is modelled with
+    ``link_degrade`` instead, which the watchdog must detect.
+    """
+
+    def __init__(self, schedule, seed: int = 0):
+        self.schedule: List[FaultSpec] = parse_faults(schedule)
+        self.seed = int(seed)
+        self.rng = np.random.default_rng(self.seed)
+        self.step = -1
+        self._fired: set = set()
+        self._lock = threading.Lock()
+
+    def tick(self) -> int:
+        with self._lock:
+            self.step += 1
+            return self.step
+
+    def _active(self, kind: str) -> List[FaultSpec]:
+        return [s for s in self.schedule if s.kind == kind and s.active(self.step)]
+
+    def link_factor(self) -> float:
+        """Current link slowdown multiplier (1.0 = healthy)."""
+        with self._lock:
+            specs = self._active("link_degrade")
+            if not specs:
+                return 1.0
+            return max(s.factor for s in specs)
+
+    def _fire_once(self, kind: str) -> Optional[FaultSpec]:
+        specs = self._active(kind)
+        for s in specs:
+            key = (id(s), self.step)
+            if key not in self._fired:
+                self._fired.add(key)
+                return s
+        return None
+
+    def maybe_stall(self) -> None:
+        """Raise :class:`TransientFault` once per active stall spec/step."""
+        with self._lock:
+            s = self._fire_once("transient_stall")
+        if s is not None:
+            raise TransientFault(f"injected stage stall at step {self.step}")
+
+    def maybe_read_error(self) -> None:
+        """Raise :class:`HostReadError` once per active read-error spec/step."""
+        with self._lock:
+            s = self._fire_once("read_error")
+        if s is not None:
+            raise HostReadError(f"injected host read error at step {self.step}")
+
+    def corrupt(self, named_arrays: Dict[str, np.ndarray], n_real: int) -> int:
+        """Flip bits in real rows of staged host buffers, in place.
+
+        `named_arrays` maps name -> array whose leading axis is the
+        staged-row axis; only rows ``< n_real`` are touched.  Returns the
+        number of corrupted rows (0 when no corrupt_rows spec is active
+        this step).
+        """
+        with self._lock:
+            s = self._fire_once("corrupt_rows")
+            if s is None or n_real <= 0:
+                return 0
+            row = int(self.rng.integers(0, n_real))
+            for arr in named_arrays.values():
+                flat = arr[row].reshape(-1)
+                view = flat.view(
+                    np.uint16 if flat.dtype.itemsize == 2 else np.uint32
+                )
+                j = int(self.rng.integers(0, view.size))
+                view[j] ^= np.uint16(0x4000) if view.dtype == np.uint16 else np.uint32(
+                    0x40000000
+                )
+            return 1
+
+    def last_fault_step(self) -> int:
+        """Last step at which any scheduled fault is active (-1 if none)."""
+        stops = [s.stop - 1 for s in self.schedule]
+        return max(stops) if stops else -1
+
+
+class LinkWatchdog:
+    """Deadline detection + online link re-fit from observed stage timings.
+
+    Budgets come from the cost model's link constants (`gbps`,
+    `latency_s`); the first `calib_n` observations re-baseline them to
+    the actual machine (CI runners vary wildly), after which a stage
+    taking more than ``margin * expected + floor`` counts towards a
+    degradation streak.  `patience` consecutive misses flips
+    :attr:`degraded`; `recover_patience` consecutive on-time stages
+    flips :attr:`healed`.
+    """
+
+    def __init__(
+        self,
+        expert_bytes: int,
+        gbps: float,
+        latency_s: float,
+        *,
+        margin: float = 4.0,
+        floor_s: float = 5e-4,
+        patience: int = 3,
+        recover_patience: int = 3,
+        calib_n: int = 4,
+        window: int = 32,
+    ):
+        self.expert_bytes = max(1, int(expert_bytes))
+        self.gbps = max(float(gbps), 1e-3)
+        self.latency_s = max(float(latency_s), 0.0)
+        self.margin = float(margin)
+        self.floor_s = float(floor_s)
+        self.patience = int(patience)
+        self.recover_patience = int(recover_patience)
+        self.calib_n = int(calib_n)
+        self.window = int(window)
+        self._samples: List[Tuple[float, float]] = []  # (nbytes, seconds)
+        self._calibrated = False
+        self.over_streak = 0
+        self.ok_streak = 0
+        self.deadline_misses = 0
+
+    def expected_s(self, nbytes: int) -> float:
+        return self.latency_s + float(nbytes) / (self.gbps * 1e9)
+
+    def deadline(self, nbytes: int) -> float:
+        # margin multiplies the floor as well: when transfers are small
+        # enough that the floor (observed median) dominates expected_s,
+        # healthy jitter sits AT the median — an additive floor would put
+        # the deadline right on top of it and miss ~half the time.  A
+        # slowdown of factor k is detectable whenever k > margin.
+        return self.margin * max(self.expected_s(nbytes), self.floor_s)
+
+    def _recent(self) -> Tuple[np.ndarray, np.ndarray]:
+        recent = self._samples[-self.window :]
+        sizes = np.asarray([r[0] for r in recent], dtype=np.float64)
+        times = np.asarray([r[1] for r in recent], dtype=np.float64)
+        return sizes, times
+
+    def _baseline(self) -> None:
+        sizes, times = self._recent()
+        gbps, lat, _rejected = fit_link_constants(sizes, times)
+        self.gbps = max(gbps, 1e-3)
+        self.latency_s = max(lat, 0.0)
+        # Tiny transfers on a shared CI box jitter by hundreds of us; keep
+        # the absolute floor at least the observed median so calibration
+        # noise can't trip the deadline.
+        self.floor_s = max(self.floor_s, float(np.median(times)))
+        self._calibrated = True
+
+    def observe(self, nbytes: int, seconds: float) -> bool:
+        """Record one stage timing; returns True if it missed its deadline."""
+        self._samples.append((float(nbytes), float(seconds)))
+        if len(self._samples) > 4 * self.window:
+            del self._samples[: -2 * self.window]
+        if not self._calibrated:
+            if len(self._samples) >= self.calib_n:
+                self._baseline()
+            return False
+        missed = seconds > self.deadline(nbytes)
+        if missed:
+            self.deadline_misses += 1
+            self.over_streak += 1
+            self.ok_streak = 0
+        else:
+            self.ok_streak += 1
+            self.over_streak = 0
+        return missed
+
+    @property
+    def degraded(self) -> bool:
+        return self.over_streak >= self.patience
+
+    @property
+    def healed(self) -> bool:
+        return self.ok_streak >= self.recover_patience
+
+    def refit(self) -> Tuple[float, float, bool]:
+        """Re-fit (gbps, latency_s) from the recent window.
+
+        Returns ``(gbps, latency_s, rejected)`` where `rejected` means
+        the lstsq fit was degenerate and a median-throughput fallback
+        was used.  Does *not* mutate the baseline — the baseline is the
+        healthy link; the refit describes the link as it is now, for
+        building the degraded DaliConfig.
+        """
+        if not self._samples:
+            return self.gbps, self.latency_s, True
+        sizes, times = self._recent()
+        gbps, lat, rejected = fit_link_constants(sizes, times)
+        return max(gbps, 1e-3), max(lat, 0.0), rejected
+
+
+# Ladder states.
+HEALTHY = "healthy"
+DEGRADED = "degraded"
+LITTLE = "little"
+
+
+@dataclass
+class DegradationLadder:
+    """Recoverable escalation: healthy -> degraded -> little -> healthy.
+
+    Driven once per step by the store with the watchdog's current view.
+    Transitions are recorded (step, from, to) so benchmarks can report
+    time-to-recover.
+    """
+
+    watchdog: LinkWatchdog
+    little_after: int = 6
+    enable_little: bool = True
+    state: str = HEALTHY
+    steps_in_state: int = 0
+    transitions: List[Tuple[int, str, str]] = field(default_factory=list)
+
+    def _move(self, step: int, to: str) -> Tuple[str, str]:
+        frm = self.state
+        self.state = to
+        self.steps_in_state = 0
+        self.transitions.append((step, frm, to))
+        return (frm, to)
+
+    def on_step(self, step: int) -> Optional[Tuple[str, str]]:
+        """Advance the ladder; returns (from, to) on a transition."""
+        self.steps_in_state += 1
+        wd = self.watchdog
+        if self.state == HEALTHY:
+            if wd.degraded:
+                return self._move(step, DEGRADED)
+        elif self.state == DEGRADED:
+            if wd.healed:
+                return self._move(step, HEALTHY)
+            if self.enable_little and self.steps_in_state >= self.little_after and not wd.healed:
+                return self._move(step, LITTLE)
+        elif self.state == LITTLE:
+            if wd.healed:
+                return self._move(step, HEALTHY)
+        return None
+
+    def time_to_recover(self) -> Optional[int]:
+        """Steps from first leaving HEALTHY to last returning to it."""
+        first_down = next(
+            (s for s, frm, to in self.transitions if frm == HEALTHY), None
+        )
+        last_up = None
+        for s, frm, to in self.transitions:
+            if to == HEALTHY:
+                last_up = s
+        if first_down is None or last_up is None:
+            return None
+        return max(0, last_up - first_down)

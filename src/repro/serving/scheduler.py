@@ -65,23 +65,36 @@ from repro.core.engine import DaliConfig, TelemetryAggregator
 from repro.models.config import ModelConfig
 from repro.models.model import init_caches
 from repro.serving.expert_store import ExpertStore
-from repro.serving.steps import (init_serve_state, make_admit_prefill,
-                                 make_admit_step, make_decode_step,
+from repro.serving.steps import (ResilientDecode, init_serve_state,
+                                 make_admit_prefill, make_admit_step,
                                  make_prefill_step, resolve_policy,
                                  retire_slot)
 
 OFFLOAD_MODES = ("modeled", "blocking", "overlap", "pipelined")
 
 
-def make_store(offload: str, params, cfg, policy, fallback: str = "fetch"):
+def make_store(offload: str, params, cfg, policy, fallback: str = "fetch",
+               faults=None, cost_model=None):
     """Build the ExpertStore for a physical offload mode (None for
     "modeled").  The pool is sized to the policy's maximum effective
     resident set (cache ∪ prefetch) and the per-step copy budget to its
-    churn (prefetch + cache swaps)."""
+    churn (prefetch + cache swaps).
+
+    ``faults`` (a schedule string / FaultSpec list / FaultInjector, see
+    serving/faults.py) arms the store's fault-injection + degradation
+    subsystem; ``cost_model`` supplies the link constants its watchdog
+    budgets deadlines from (default: the LOCAL_PC profile for ``cfg``).
+    Fault injection wraps the *physical* streaming path, so it is
+    meaningless — and rejected — with ``offload="modeled"``."""
     if offload not in OFFLOAD_MODES:
         raise ValueError(f"offload must be one of "
                          f"{'|'.join(OFFLOAD_MODES)}, got {offload!r}")
     if offload == "modeled":
+        if faults is not None:
+            raise ValueError('faults need a physical offload mode '
+                             '("blocking" | "overlap" | "pipelined"); '
+                             '"modeled" has no streaming path to inject '
+                             'into')
         return None
     if not (policy.schedules and cfg.moe is not None):
         raise ValueError("physical offload requires an MoE architecture "
@@ -96,7 +109,8 @@ def make_store(offload: str, params, cfg, policy, fallback: str = "fetch"):
         params, cfg,
         n_slots=min(cfg.moe.n_routed,
                     dcfg.cache_size + dcfg.prefetch_size + moves),
-        max_moves=moves, fallback=fallback, mode=offload)
+        max_moves=moves, fallback=fallback, mode=offload,
+        faults=faults, cost_model=cost_model)
 
 
 @dataclass
@@ -128,7 +142,26 @@ class ServeMetrics:
     waves: int = 0                      # wave server: waves; cont.: unused
     steps: int = 0                      # decode steps
     occupancy_sum: int = 0              # live slots summed over steps
+    requests: int = 0                   # finished requests
+    # physical-offload counters folded from ExpertStore.drain() — the
+    # drain-safe path: the store's pure_callback fallbacks bump under a
+    # lock and each delta lands in exactly one fold, so per-request
+    # rates derived here cannot double- or under-count
+    offload_tel: dict = field(default_factory=dict)
     dali: TelemetryAggregator = field(default_factory=TelemetryAggregator)
+
+    def fold_offload(self, deltas: Optional[dict]):
+        if not deltas:
+            return
+        for k, v in deltas.items():
+            self.offload_tel[k] = self.offload_tel.get(k, 0) + v
+
+    def fallback_rate(self) -> float:
+        """Miss-fallback (token, k) rows per finished request — the
+        per-request visibility of degradation the reports surface."""
+        if not self.requests:
+            return 0.0
+        return self.offload_tel.get("fallback_rows", 0) / self.requests
 
     # -- legacy accessors (pre-refactor field names) -----------------------
     @property
@@ -157,6 +190,16 @@ class ServeMetrics:
              f"decode={dc:.1f} tok/s occ={self.mean_occupancy():.2f}")
         if self.dali.lookups:
             s += " | " + self.dali.summary()
+        if self.offload_tel:
+            ot = self.offload_tel
+            s += (f" | fb_rows/req={self.fallback_rate():.2f}"
+                  f" fetches={ot.get('fallback_fetches', 0)}")
+            extras = [(k, ot[k]) for k in ("retries", "stage_aborts",
+                                           "corrupt_caught",
+                                           "restaged_rows", "little_steps")
+                      if ot.get(k)]
+            if extras:
+                s += " " + " ".join(f"{k}={v}" for k, v in extras)
         return s
 
 
@@ -194,7 +237,7 @@ class ContinuousBatchServer:
                  max_len: int = 256, eos_id: int = 1,
                  dali_cfg: Optional[DaliConfig] = None, res_vecs=None,
                  min_bucket: int = 16, policy=None,
-                 offload: str = "modeled"):
+                 offload: str = "modeled", faults=None, cost_model=None):
         from repro.models.config import layer_pattern
         if any(mixer == "mamba" for mixer, _ in layer_pattern(cfg)):
             # attention masks hide right-pad slots (pos = -1); a recurrent
@@ -211,14 +254,17 @@ class ContinuousBatchServer:
         # validated here, at construction (registry names listed on error)
         self.policy = resolve_policy(policy, cfg, dali_cfg)
         self.offload = offload
-        self.store = make_store(offload, params, cfg, self.policy)
+        self.store = make_store(offload, params, cfg, self.policy,
+                                faults=faults, cost_model=cost_model)
         self.res_vecs = res_vecs
         self.min_bucket = min_bucket
         self.queue: deque[Request] = deque()
         self.metrics = ServeMetrics()
         self._prefill = jax.jit(make_admit_prefill(cfg))
-        self._decode = jax.jit(make_decode_step(cfg, policy=self.policy,
-                                                offload=self.store))
+        # resilient decode: one callable that swaps between the healthy/
+        # degraded/little jitted variants as the store's ladder reacts
+        self._decode = ResilientDecode(cfg, policy=self.policy,
+                                       offload=self.store)
         self._admit = jax.jit(make_admit_step(cfg))
         # rolling (sliding-window) caches keep the LAST S_c positions of a
         # prefill chunk; right-pad beyond the window would evict real prompt
@@ -308,6 +354,7 @@ class ContinuousBatchServer:
             if self.store is not None:
                 state["offload"] = self.store.pre_step(
                     state["offload"], self.offload, pool_target)
+                self._decode.react()     # follow the degradation ladder
             state, _, tel = self._decode(self.params, state, self.res_vecs)
             if self.store is not None:
                 self.store.post_dispatch(self.offload, pool_target)
@@ -332,10 +379,15 @@ class ContinuousBatchServer:
             self.metrics.decode_s += t1 - t0
             self.metrics.steps += 1
             self.metrics.occupancy_sum += emitted
+            if self.store is not None:
+                self.metrics.fold_offload(self.store.drain())
             # sync-free: telemetry accumulates on device, drained on the
             # aggregator's flush interval (and below, at retirement)
             self.metrics.dali.observe(state.get("dali"), n_active=emitted)
         self.metrics.dali.end_epoch()
+        if self.store is not None:
+            self.metrics.fold_offload(self.store.drain())
+        self.metrics.requests += len(finished)
         return finished
 
 
@@ -351,7 +403,7 @@ class BatchServer:
                  max_len: int = 256, eos_id: int = 1,
                  dali_cfg: Optional[DaliConfig] = None, res_vecs=None,
                  min_bucket: int = 16, policy=None,
-                 offload: str = "modeled"):
+                 offload: str = "modeled", faults=None, cost_model=None):
         self.params = params
         self.cfg = cfg
         self.batch = batch_size
@@ -361,14 +413,15 @@ class BatchServer:
         # validated here, at construction (registry names listed on error)
         self.policy = resolve_policy(policy, cfg, dali_cfg)
         self.offload = offload
-        self.store = make_store(offload, params, cfg, self.policy)
+        self.store = make_store(offload, params, cfg, self.policy,
+                                faults=faults, cost_model=cost_model)
         self.res_vecs = res_vecs
         self.min_bucket = min_bucket
         self.queue: deque[Request] = deque()
         self.metrics = ServeMetrics()
         self._prefill = jax.jit(make_prefill_step(cfg, max_len))
-        self._decode = jax.jit(make_decode_step(cfg, policy=self.policy,
-                                                offload=self.store))
+        self._decode = ResilientDecode(cfg, policy=self.policy,
+                                       offload=self.store)
 
     def submit(self, req: Request):
         if not req.submitted_at:
@@ -444,6 +497,7 @@ class BatchServer:
             if self.store is not None:
                 state["offload"] = self.store.pre_step(
                     state["offload"], self.offload, pool_target)
+                self._decode.react()     # follow the degradation ladder
             state, logits, tel = self._decode(self.params, state,
                                               self.res_vecs)
             if self.store is not None:
@@ -461,6 +515,8 @@ class BatchServer:
             self.metrics.decode_tokens += emitted
             self.metrics.steps += 1
             self.metrics.occupancy_sum += emitted
+            if self.store is not None:
+                self.metrics.fold_offload(self.store.drain())
             self.metrics.dali.observe(state.get("dali"), n_active=emitted)
             if not live.any():
                 break
@@ -468,7 +524,10 @@ class BatchServer:
         # each wave re-inits its serve (and DALI) state: close the epoch so
         # the next wave's accumulator drains from zero again
         self.metrics.dali.end_epoch()
+        if self.store is not None:
+            self.metrics.fold_offload(self.store.drain())
         self.metrics.waves += 1
+        self.metrics.requests += len(wave)
         for r in wave:
             if not r.done_at:
                 r.done_at = time.perf_counter()

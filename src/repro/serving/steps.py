@@ -167,10 +167,31 @@ def retire_slot(state, slot: int):
     return dict(state, active=state["active"].at[slot].set(False))
 
 
+class _FallbackView:
+    """Proxy over an ExpertStore presenting a different ``fallback``.
+
+    ``slot_fetch.fallback`` is read at trace time inside the jitted
+    decode, so one physical store can back several compiled decode
+    variants (full-quality "fetch" vs. the degraded "little" rung)
+    without being rebuilt — the proxy swaps the constant, every other
+    attribute (callbacks, counters) delegates to the real store."""
+
+    def __init__(self, store, fallback: str):
+        from repro.serving.expert_store import FALLBACKS
+        if fallback not in FALLBACKS:
+            raise ValueError(f"fallback must be one of "
+                             f"{'|'.join(FALLBACKS)}, got {fallback!r}")
+        self._store = store
+        self.fallback = fallback
+
+    def __getattr__(self, name):
+        return getattr(self._store, name)
+
+
 def make_decode_step(cfg: ModelConfig, dali_cfg: Optional[DaliConfig] = None,
                      moe_capacity: Optional[int] = None,
                      sample: bool = False, temperature: float = 1.0,
-                     policy=None, offload=None):
+                     policy=None, offload=None, fallback=None):
     """Returns decode(params, state, res_vecs=None) -> (state', logits,
     telemetry).  ``policy`` (name, OffloadPolicy, or None — see
     ``resolve_policy``) selects the in-graph offloading scheduler; the
@@ -191,13 +212,25 @@ def make_decode_step(cfg: ModelConfig, dali_cfg: Optional[DaliConfig] = None,
     Works for both serve-state layouts: a scalar ``pos`` decodes the wave
     way (shared position); a per-slot ``pos`` (B,) uses per-row positions
     and, when scheduling is on, masks routing observables by
-    ``state["active"]`` so the policy sees the actual per-step token mix."""
+    ``state["active"]`` so the policy sees the actual per-step token mix.
+
+    ``fallback`` overrides the store's own miss fallback for THIS decode
+    variant (a trace-time constant — see ``_FallbackView``); with the
+    effective fallback "little" the store's resident int8 twin pool is
+    closed over as ``slot_little``."""
     policy = resolve_policy(policy, cfg, dali_cfg)
     use_policy = policy.schedules and cfg.moe is not None
     if offload is not None and not use_policy:
         raise ValueError("physical offload (offload=) requires an MoE "
                          "architecture and a scheduling policy — its slot "
                          "plans are lowered from the policy's decisions")
+    slot_fetch = offload
+    slot_little = None
+    if offload is not None:
+        if fallback is not None and fallback != offload.fallback:
+            slot_fetch = _FallbackView(offload, fallback)
+        if (fallback or offload.fallback) == "little":
+            slot_little = offload.little_view()
 
     def decode(params, state, res_vecs=None):
         per_slot = state["pos"].ndim == 1
@@ -210,7 +243,9 @@ def make_decode_step(cfg: ModelConfig, dali_cfg: Optional[DaliConfig] = None,
         slot_kw = {}
         if offload is not None:
             slot_kw = dict(expert_slots=offload.build_view(state["offload"]),
-                           slot_fetch=offload, slot_live=active)
+                           slot_fetch=slot_fetch, slot_live=active)
+            if slot_little is not None:
+                slot_kw["slot_little"] = slot_little
         logits, caches, infos = apply_model(
             params, state["tokens"], cfg, positions=positions,
             caches=state["caches"], moe_capacity=moe_capacity,
@@ -241,6 +276,80 @@ def make_decode_step(cfg: ModelConfig, dali_cfg: Optional[DaliConfig] = None,
         return new_state, logits, telemetry
 
     return decode
+
+
+class ResilientDecode:
+    """Decode-variant switchboard driven by the store's degradation
+    ladder (DESIGN.md §10).
+
+    ``slot_fetch.fallback`` and the policy's DaliConfig cost constants
+    are trace-time facts, so the ladder's reactions cannot be switched
+    in-graph — instead the serving tier keeps at most THREE jitted
+    decode variants and selects one per step:
+
+      * ``healthy``  — the base policy, the store's own fallback;
+      * ``degraded`` — the policy re-solved with the watchdog's re-fit
+        ``t_trans`` and a zeroed prefetch budget
+        (``ExpertStore.degraded_policy`` — the paper's workload-aware
+        assignment reacting to hardware state);
+      * ``little``   — the degraded policy plus ``fallback="little"``
+        (misses read the resident int8 twins; streaming is suspended by
+        the store itself).
+
+    Variants compile lazily on first entry into each rung, so a healthy
+    run pays exactly one compile — same as before this class existed.
+    The policy state pytree is structurally identical across variants
+    (only cost constants change), so ``state["dali"]`` flows through
+    transitions untouched.  ``react()`` aligns the active variant with
+    the ladder after each ``pre_step``; with no ladder (no faults) the
+    switchboard collapses to the single healthy variant."""
+
+    RUNGS = ("healthy", "degraded", "little")
+
+    def __init__(self, cfg: ModelConfig,
+                 dali_cfg: Optional[DaliConfig] = None,
+                 moe_capacity: Optional[int] = None, sample: bool = False,
+                 temperature: float = 1.0, policy=None, offload=None,
+                 jit: bool = True):
+        self.cfg = cfg
+        self.offload = offload
+        self.policy = resolve_policy(policy, cfg, dali_cfg)
+        self._kw = dict(moe_capacity=moe_capacity, sample=sample,
+                        temperature=temperature)
+        self._jit = jit
+        self._variants = {}
+        self.active = "healthy"
+
+    def _build(self, rung: str):
+        if rung == "healthy" or self.offload is None:
+            pol, fb = self.policy, None
+        else:
+            pol = self.offload.degraded_policy(self.policy)
+            fb = "little" if rung == "little" else None
+        fn = make_decode_step(self.cfg, policy=pol, offload=self.offload,
+                              fallback=fb, **self._kw)
+        return jax.jit(fn) if self._jit else fn
+
+    def react(self):
+        """Align the active variant with the store's ladder state.
+        Returns the (from, to) rung transition when it changed, None
+        otherwise.  Call after ``store.pre_step`` (where the ladder
+        advances) and before dispatching the decode."""
+        store = self.offload
+        if store is None or getattr(store, "ladder", None) is None:
+            return None
+        want = store.ladder.state
+        if want == self.active:
+            return None
+        frm, self.active = self.active, want
+        return (frm, want)
+
+    def __call__(self, params, state, res_vecs=None):
+        rung = self.active
+        fn = self._variants.get(rung)
+        if fn is None:
+            fn = self._variants[rung] = self._build(rung)
+        return fn(params, state, res_vecs)
 
 
 def init_serve_state(cfg: ModelConfig, batch: int, max_len: int,
