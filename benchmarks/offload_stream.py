@@ -43,7 +43,16 @@ is the cross-pass median and the per-pass walls are in the JSON.
 The link constants are re-fitted from real ``device_put`` timings
 (``CostModel.calibrate_link``) and baked into the policy's DaliConfig, so
 the scheduler's modeled transfer cost and the measured streaming share
-constants.  Writes reports/bench/BENCH_offload_stream.json.
+constants.
+
+A second sweep measures the PREFILL phase through the same slot pool
+(DESIGN.md §11): each physical mode runs a stripped-params wave prefill
+whose MoE layers assemble their dense sweeps from resident pool rows
+plus streamed waves of misses, and the rows record prefill tok/s, the
+stage/H2D breakdown, the analytic peak device bytes and the bit-parity
+verdict against the full-resident reference.
+
+Writes reports/bench/BENCH_offload_stream.json.
 
   PYTHONPATH=src python -m benchmarks.offload_stream --smoke   # CI tier-2
 """
@@ -92,16 +101,15 @@ def make_runner(mode: str, params, cfg, pol, res_vecs, *, batch: int,
     ``warmup`` untimed steps from a fresh serve state, returning wall
     µs/step.  ``runner.store`` exposes the mode's ExpertStore (None for
     "modeled")."""
-    from repro.serving.expert_store import strip_expert_params
-    from repro.serving.scheduler import make_store
-    from repro.serving.steps import init_serve_state, make_decode_step
+    from repro.serving.spec import OffloadSpec, ServeSpec
 
-    store = None
-    dec_params = params
-    if mode != "modeled":
-        store = make_store(mode, params, cfg, pol, fallback=fallback)
-        dec_params = strip_expert_params(params, cfg)
-    decode = jax.jit(make_decode_step(cfg, policy=pol, offload=store))
+    # canonical construction: resolve() builds the store and strips the
+    # expert stacks out of the served params for physical modes
+    rs = ServeSpec(cfg=cfg, policy=pol, batch_size=batch, max_len=max_len,
+                   offload=OffloadSpec(mode=mode, fallback=fallback)
+                   ).resolve(params)
+    store, dec_params = rs.store, rs.params
+    decode = jax.jit(rs.decode_step())
 
     def step(state, target, timers=None):
         # the store's hooks schedule the streaming around the dispatch:
@@ -129,8 +137,7 @@ def make_runner(mode: str, params, cfg, pol, res_vecs, *, batch: int,
         timed ones.  Returns (wall µs/step, breakdown dict) where the
         breakdown covers the TIMED window only (store counters are
         snapshot-diffed around it)."""
-        state = init_serve_state(cfg, batch, max_len, policy=pol,
-                                 seed=seed, offload=store)
+        state = rs.init_state(seed=seed)
         target = None
         for _ in range(warmup):
             state, target = step(state, target)
@@ -201,6 +208,116 @@ def run_modes(params, cfg, pol, res_vecs, *, batch: int, max_len: int,
     return rows
 
 
+def run_prefill_modes(params, cfg, pol, *, batch: int, prompt_len: int,
+                      reps: int, fallback: str = "fetch", seed: int = 0,
+                      modes=MODES):
+    """Prefill-phase measurement through the physical slot path
+    (DESIGN.md §11): each physical mode runs the SAME wave prefill with
+    expert stacks STRIPPED from the device params — every MoE layer
+    assembles its dense sweep from the resident pool plus
+    ``prefill_rows``-sized streamed waves — against the full-resident
+    "modeled" reference.  Rows carry prefill tok/s, the per-prefill
+    stage/H2D breakdown, the analytic peak device bytes
+    (``ExpertStore.memory_layout``) and the bit-parity verdict (tokens
+    AND caches must equal the full-resident prefill exactly).  Passes
+    are interleaved round-robin like ``run_modes``."""
+    from repro.models.model import init_caches
+    from repro.serving.spec import OffloadSpec, ServeSpec
+    from repro.serving.steps import make_prefill_step
+
+    max_len = prompt_len + 8
+    rng = np.random.default_rng(seed + 3)
+    toks = jnp.asarray(rng.integers(
+        1, cfg.vocab, size=(batch, prompt_len), dtype=np.int64)
+        .astype(np.int32))
+    caches0 = init_caches(cfg, batch, max_len)
+
+    ref_fn = jax.jit(make_prefill_step(cfg, max_len))
+    ref_tok, ref_caches = jax.block_until_ready(ref_fn(params, toks,
+                                                       caches0))
+    ref_leaves = jax.tree_util.tree_leaves(ref_caches)
+
+    # (prefill_fn, served_params, resolved-or-None) per mode; physical
+    # modes construct through the canonical spec path and serve stripped
+    # params — the run itself proves prefill never reads expert stacks
+    setups = {}
+    for m in modes:
+        if m == "modeled":
+            setups[m] = (ref_fn, params, None)
+            continue
+        rs = ServeSpec(cfg=cfg, policy=pol, batch_size=batch,
+                       max_len=max_len,
+                       offload=OffloadSpec(mode=m, fallback=fallback)
+                       ).resolve(params)
+        setups[m] = (jax.jit(rs.prefill_step(max_len)), rs.params, rs)
+        # compile outside the timed window
+        warm = rs.init_state(batch=batch, max_len=max_len)
+        jax.block_until_ready(setups[m][0](rs.params, toks, caches0, None,
+                                           warm["offload"]))
+
+    PF_KEYS = ("prefill_fetch_rows", "prefill_h2d_bytes", "prefill_waves",
+               "prefill_host_rows", "prefill_stage_s")
+    walls = {m: [] for m in modes}
+    deltas = {m: {} for m in modes}
+    exact = {m: True for m in modes}
+    for _ in range(reps):
+        for m in modes:
+            fn, p, rs = setups[m]
+            if rs is None:
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(p, toks, caches0))
+                walls[m].append(time.perf_counter() - t0)
+                continue
+            # fresh state re-seeds the pool from the policy's initial
+            # resident set — every pass streams the same miss set
+            state = rs.init_state(batch=batch, max_len=max_len)
+            snap = dict(rs.store.stats())
+            t0 = time.perf_counter()
+            tok, caches = jax.block_until_ready(
+                fn(p, toks, caches0, None, state["offload"]))
+            walls[m].append(time.perf_counter() - t0)
+            now = rs.store.stats()
+            for k in PF_KEYS:
+                deltas[m][k] = deltas[m].get(k, 0) + (now[k] - snap[k])
+            exact[m] = exact[m] and bool(jnp.array_equal(tok, ref_tok)) \
+                and all(bool(jnp.array_equal(a, b)) for a, b in
+                        zip(ref_leaves, jax.tree_util.tree_leaves(caches)))
+
+    full_resident = next(
+        (setups[m][2].store.memory_layout()["full_resident_bytes"]
+         for m in modes if setups[m][2] is not None), None)
+    rows = []
+    for m in modes:
+        wall_ms = float(np.median(walls[m])) * 1e3
+        d = deltas[m]
+        rs = setups[m][2]
+        mem = rs.store.memory_layout() if rs is not None else None
+        rows.append({
+            "mode": m,
+            "wall_ms": round(wall_ms, 3),
+            "prefill_tok_s": round(batch * prompt_len
+                                   / max(wall_ms / 1e3, 1e-9), 1),
+            "exact_vs_modeled": bool(exact[m]),
+            "fetch_rows_per_prefill": round(
+                d.get("prefill_fetch_rows", 0) / reps, 2),
+            "h2d_mb_per_prefill": round(
+                d.get("prefill_h2d_bytes", 0) / reps / 1e6, 3),
+            "waves_per_prefill": round(
+                d.get("prefill_waves", 0) / reps, 2),
+            "host_rows_per_prefill": round(
+                d.get("prefill_host_rows", 0) / reps, 2),
+            "stage_ms_per_prefill": round(
+                d.get("prefill_stage_s", 0.0) / reps * 1e3, 4),
+            # peak device expert bytes during the sweep vs the
+            # full-resident stack the offload replaces
+            "peak_pool_bytes": (mem["prefill_peak_bytes"] if mem
+                                else full_resident),
+            "pool_bytes": mem["pool_bytes"] if mem else full_resident,
+            "memory": mem,
+        })
+    return rows
+
+
 def run_fault_trial(params, cfg, pol, res_vecs, *, mode: str, batch: int,
                     steps: int, faults: str, fallback: str = "fetch",
                     seed: int = 0):
@@ -213,11 +330,9 @@ def run_fault_trial(params, cfg, pol, res_vecs, *, mode: str, batch: int,
     store's ladder state, and returns the ``fault_tolerance`` record:
     per-phase ms/step, fault+recovery counters, ladder transitions,
     time-to-recover and the exact/allclose/bounded verdicts."""
-    from repro.serving.expert_store import strip_expert_params
     from repro.serving.faults import LITTLE, parse_faults
-    from repro.serving.scheduler import make_store
-    from repro.serving.steps import (ResilientDecode, init_serve_state,
-                                     make_decode_step)
+    from repro.serving.spec import OffloadSpec, ServeSpec
+    from repro.serving.steps import init_serve_state, make_decode_step
 
     specs = parse_faults(faults)
     last_stop = max((s.stop for s in specs), default=0)
@@ -238,12 +353,12 @@ def run_fault_trial(params, cfg, pol, res_vecs, *, mode: str, batch: int,
         state, logits, _ = ref_dec(params, state, res_vecs)
         ref_logits.append(np.asarray(logits))
 
-    store = make_store(mode, params, cfg, pol, fallback=fallback,
-                       faults=faults)
-    decode = ResilientDecode(cfg, policy=pol, offload=store)
-    dec_params = strip_expert_params(params, cfg)
-    state = init_serve_state(cfg, batch, max_len, policy=pol, seed=seed,
-                             offload=store)
+    rs = ServeSpec(cfg=cfg, policy=pol, batch_size=batch, max_len=max_len,
+                   offload=OffloadSpec(mode=mode, fallback=fallback,
+                                       faults=faults)).resolve(params)
+    store, dec_params = rs.store, rs.params
+    decode = rs.resilient_decode()
+    state = rs.init_state(seed=seed)
     target = None
     walls, phases, littles, exact, close = [], [], [], [], []
     for t in range(steps):
@@ -281,8 +396,7 @@ def run_fault_trial(params, cfg, pol, res_vecs, *, mode: str, batch: int,
     if h.get("ladder_state", "healthy") == "healthy":
         s_ref = init_serve_state(cfg, batch, max_len, policy=pol,
                                  seed=seed)
-        s2 = init_serve_state(cfg, batch, max_len, policy=pol, seed=seed,
-                              offload=store)
+        s2 = rs.init_state(seed=seed)
         target = None
         exact_after = True
         for t in range(6):
@@ -356,6 +470,9 @@ def main(argv=None):
                          "single-user setting")
     ap.add_argument("--steps", type=int, default=32,
                     help="timed decode steps per pass")
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="prompt length for the prefill-phase rows "
+                         "(DESIGN.md §11 slot streaming)")
     ap.add_argument("--reps", type=int, default=0,
                     help="fresh-state passes (median reported); 0 = auto")
     ap.add_argument("--offload", default=",".join(MODES),
@@ -451,7 +568,16 @@ def main(argv=None):
                      max_len=max_len, steps=args.steps, reps=reps,
                      fallback=args.fallback, seed=args.seed, modes=modes)
 
+    pf_reps = max(3, reps // 3)
+    print(f"== prefill phase: {'|'.join(modes)} interleaved, {pf_reps} "
+          f"passes at prompt_len={args.prompt_len}")
+    pf_rows = run_prefill_modes(bm.params, cfg, pol, batch=args.batch,
+                                prompt_len=args.prompt_len, reps=pf_reps,
+                                fallback=args.fallback, seed=args.seed,
+                                modes=modes)
+
     from benchmarks.report_md import (offload_breakdown_table,
+                                      offload_prefill_table,
                                       offload_stream_table)
     print()
     for line in offload_stream_table(rows):
@@ -459,6 +585,16 @@ def main(argv=None):
     print()
     for line in offload_breakdown_table(rows):
         print(line)
+    print()
+    for line in offload_prefill_table(pf_rows):
+        print(line)
+    bad_pf = [r["mode"] for r in pf_rows if not r["exact_vs_modeled"]]
+    if bad_pf:
+        print(f"\nWARNING: prefill NOT bit-identical to full-resident "
+              f"for {bad_pf}")
+    else:
+        print("\nprefill bit-identical to full-resident for all "
+              "physical modes (stripped expert params)")
     by = {r["mode"]: r for r in rows}
     summary = {}
 
@@ -504,6 +640,8 @@ def main(argv=None):
                    "smoke": bool(args.smoke),
                    "workload": {"batch": args.batch, "steps": args.steps,
                                 "reps": reps, "experts": args.experts,
+                                "prompt_len": args.prompt_len,
+                                "prefill_reps": pf_reps,
                                 "cache_ratio": args.cache_ratio,
                                 "prefetch_size": args.prefetch_size,
                                 "fallback": args.fallback,
@@ -514,7 +652,8 @@ def main(argv=None):
                                     cm.link_latency_s * 1e6, 2),
                                 "expert_bytes": cm.expert_bytes},
                    **summary,
-                   "rows": rows}, f, indent=2)
+                   "rows": rows,
+                   "prefill": pf_rows}, f, indent=2)
     print(f"wrote {out}")
 
 

@@ -265,6 +265,17 @@ def offload_stream_section():
                   f"misses={rec.get('pipelined_fewer_misses')} — per-layer "
                   "inject streaming keeps decisions t+1-fresh with the "
                   "commit amortized across layers; DESIGN.md §9.)")
+    pf = rec.get("prefill")
+    if pf:
+        print("\n#### Offload streaming prefill (slot-pool sweeps, "
+              "DESIGN.md §11)\n")
+        for line in offload_prefill_table(pf):
+            print(line)
+        print(f"\n(prompt_len={rec['workload'].get('prompt_len')}; "
+              "physical modes prefill with STRIPPED expert params — each "
+              "MoE layer assembles its dense sweep from resident pool "
+              "rows plus streamed waves of misses; exact = tokens AND "
+              "caches bit-identical to the full-resident reference.)")
     ft = rec.get("fault_tolerance")
     if ft:
         print("\n#### Fault tolerance (watchdog + degradation ladder)\n")
@@ -291,6 +302,30 @@ def offload_stream_table(rows):
                    f"| {r['h2d_rows_per_step']:.2f} "
                    f"| {r['h2d_mb_per_step']:.3f} "
                    f"| {r['fallback_rows_per_step']:.2f} |")
+    return out
+
+
+def offload_prefill_table(rows):
+    """Markdown table lines for the prefill-phase records written by
+    offload_stream (single source of the column layout — the benchmark's
+    stdout uses it too).  "peak device MB" is the analytic expert-weight
+    footprint during one sweep (resident pool + one transient (E, ...)
+    layer stack + the wave staging buffer — ``memory_layout``); for
+    "modeled" it is the full-resident stack the offload replaces."""
+    out = ["| mode | wall ms | prefill tok/s | streamed experts | waves | "
+           "H2D MB | host rows | peak device MB | exact |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        peak = r.get("peak_pool_bytes")
+        peak_mb = f"{peak / 1e6:.1f}" if peak is not None else "—"
+        out.append(f"| {r['mode']} | {r['wall_ms']:.1f} "
+                   f"| {r['prefill_tok_s']:.0f} "
+                   f"| {r['fetch_rows_per_prefill']:.1f} "
+                   f"| {r['waves_per_prefill']:.1f} "
+                   f"| {r['h2d_mb_per_prefill']:.3f} "
+                   f"| {r['host_rows_per_prefill']:.1f} "
+                   f"| {peak_mb} "
+                   f"| {'yes' if r['exact_vs_modeled'] else 'NO'} |")
     return out
 
 

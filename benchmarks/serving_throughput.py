@@ -63,6 +63,9 @@ def run_server(kind: str, bm, workload, batch: int, max_len: int,
     if dcfg is not None:
         import jax.numpy as jnp
         res_vecs = jnp.asarray(np.stack(bm.res_vecs))
+    # make_server is the legacy kwarg factory — this benchmark (like
+    # examples/offload_ablation.py) DELIBERATELY stays on it as the
+    # back-compat guard for the ServeSpec shims in serving/spec.py
     server = make_server(kind, bm.params, bm.cfg, batch_size=batch,
                          max_len=max_len, dali_cfg=dcfg, res_vecs=res_vecs)
     t0 = time.perf_counter()

@@ -90,6 +90,11 @@ def main():
     from repro.serving.expert_store import strip_expert_params
     from repro.serving.steps import init_serve_state, make_decode_step
     from repro.serving.scheduler import make_store
+    # DELIBERATELY on the legacy kwarg surface (make_store +
+    # offload=/init_serve_state kwargs): this example and
+    # benchmarks/serving_throughput.py are the back-compat proof that
+    # the ServeSpec deprecation shims (serving/spec.py) keep old call
+    # sites running — expect a one-time DeprecationWarning
     pol = make_policy("dali", dcfg, top_k=cfg.moe.top_k,
                       router_type=cfg.moe.router_type)
     rv = jnp.asarray(np.stack(res))

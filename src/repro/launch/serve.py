@@ -26,9 +26,17 @@ compat baseline the serving benchmark compares against; see DESIGN.md
 ``--faults SPEC`` injects link/store faults into the physical offload
 path (serving/faults.py; e.g. ``link_degrade:x12@8-26`` or the bare
 preset name ``transient_stall``) and arms the watchdog + degradation
-ladder (DESIGN.md §10).  ``--check-exact`` re-runs the same workload
-without faults and exits non-zero unless every request's token sequence
-matches — the recovery-is-exact contract for transient faults.
+ladder (DESIGN.md §10).  ``--check-exact`` re-serves the same workload
+against a reference configuration and exits non-zero unless every
+request's token sequence matches: with ``--faults`` the reference is the
+same run without faults (the recovery-is-exact contract); with a
+faultless physical ``--offload`` the reference is the full-resident
+"modeled" run (the prefill+decode slot-streaming bit-parity contract of
+DESIGN.md §11 — the physical server runs with stripped expert params).
+
+All flags construct one :class:`repro.serving.spec.ServeSpec` (1:1 flag
+→ field mapping) resolved through ``ServeSpec.resolve(params)`` — the
+launcher is the reference user of the canonical construction API.
 """
 from __future__ import annotations
 
@@ -45,7 +53,8 @@ def main():
     from repro.core.tracing import capture_decode_trace
     from repro.data.pipeline import MarkovCorpus
     from repro.launch.train import train_loop
-    from repro.serving.scheduler import SERVER_PRESETS, Request, make_server
+    from repro.serving.scheduler import SERVER_PRESETS, Request
+    from repro.serving.spec import OffloadSpec, ServeSpec
     from repro.serving.steps import default_dali_config
 
     ap = argparse.ArgumentParser()
@@ -105,13 +114,16 @@ def main():
         res_vecs = jnp.asarray(np.stack(res))
         dali_cfg = default_dali_config(cfg, cache_ratio=args.cache_ratio)
 
-    def serve_once(faults):
-        server = make_server(args.server, params, cfg,
-                             batch_size=args.batch,
-                             max_len=args.prompt_len + args.max_new + 2,
-                             dali_cfg=dali_cfg, res_vecs=res_vecs,
-                             policy=policy, offload=args.offload,
-                             faults=faults)
+    def serve_once(offload, faults):
+        # flags → spec fields 1:1; resolve() validates the offload↔policy
+        # contract, builds the store and strips expert params for
+        # physical modes (spec.py)
+        spec = ServeSpec(
+            cfg=cfg, server=args.server, policy=policy, dali_cfg=dali_cfg,
+            batch_size=args.batch,
+            max_len=args.prompt_len + args.max_new + 2,
+            offload=OffloadSpec(mode=offload, faults=faults))
+        server = spec.resolve(params).server(res_vecs=res_vecs)
         rng = np.random.default_rng(args.seed + 2)
         for i in range(args.requests):
             server.submit(Request(rid=i,
@@ -119,7 +131,7 @@ def main():
                                   max_new_tokens=args.max_new))
         return server, server.run()
 
-    server, done = serve_once(args.faults)
+    server, done = serve_once(args.offload, args.faults)
     lat = [r.latency for r in done]
     ttft = [r.ttft for r in done if r.first_token_at]
     print(f"== served {len(done)} requests via {args.server} "
@@ -149,20 +161,28 @@ def main():
           + (f" | ttft p50={np.percentile(ttft, 50):.2f}s" if ttft else ""))
 
     if args.check_exact:
-        if not args.faults:
-            raise SystemExit("--check-exact needs --faults (it compares "
-                             "the faulted run against a clean one)")
-        print("== --check-exact: re-serving the same workload without "
-              "faults")
-        _, clean = serve_once(None)
+        if args.faults:
+            ref_offload, ref_name = args.offload, "fault-free"
+        elif args.offload != "modeled":
+            # faultless physical mode: the reference is the full-resident
+            # modeled run — checks the whole slot-streaming path
+            # (prefill waves + decode pool, stripped params) bit-exact
+            ref_offload, ref_name = "modeled", "full-resident (modeled)"
+        else:
+            raise SystemExit("--check-exact needs --faults or a physical "
+                             "--offload (it compares the run against a "
+                             "fault-free / full-resident reference)")
+        print(f"== --check-exact: re-serving the same workload against "
+              f"the {ref_name} reference")
+        _, clean = serve_once(ref_offload, None)
         by_rid = {r.rid: r.output for r in clean}
         bad = [r.rid for r in done if r.output != by_rid.get(r.rid)]
         if bad:
             print(f"   MISMATCH: requests {bad} diverged from the "
-                  "fault-free run")
+                  f"{ref_name} run")
             raise SystemExit(1)
-        print(f"   exact-output recovery verified: all {len(done)} "
-              "requests bit-identical to the fault-free run")
+        print(f"   exact-output parity verified: all {len(done)} "
+              f"requests bit-identical to the {ref_name} run")
 
 
 if __name__ == "__main__":

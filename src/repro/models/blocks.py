@@ -59,7 +59,8 @@ def apply_block(params, x, cfg: ModelConfig, kinds, *, positions,
                 moe_capacity: Optional[int] = None,
                 count_overlap: Optional[bool] = None,
                 slots=None, slot_fetch=None, slot_live=None,
-                slot_inject=None, slot_little=None):
+                slot_inject=None, slot_little=None,
+                slot_phase: str = "decode"):
     mixer_kind, mlp_kind = kinds
     moe_info = None
     new_cache = cache
@@ -114,7 +115,8 @@ def apply_block(params, x, cfg: ModelConfig, kinds, *, positions,
                                     slots=slots, slot_fetch=slot_fetch,
                                     slot_live=slot_live,
                                     slot_inject=slot_inject,
-                                    slot_little=slot_little)
+                                    slot_little=slot_little,
+                                    slot_phase=slot_phase)
         else:
             y = apply_mlp(params["mlp"], h, cfg)
             if mixer_kind == "cross":   # gated FFN on VLM cross layers

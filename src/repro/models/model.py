@@ -92,7 +92,8 @@ def apply_model(params, tokens, cfg: ModelConfig, *, positions=None,
                 count_overlap=None,
                 trace: bool = False, last_logit_only: bool = False,
                 logit_index=None, expert_slots=None, slot_fetch=None,
-                slot_live=None, slot_little=None):
+                slot_live=None, slot_little=None,
+                slot_phase: str = "decode"):
     """tokens (B, S) int32.  Returns (logits, new_caches, infos) where infos
     is a list (prefix layers) + list (scan stacks, leaves stacked (n_super,
     ...)) of MoE routing observables (None for non-MoE blocks).
@@ -116,8 +117,12 @@ def apply_model(params, tokens, cfg: ModelConfig, *, positions=None,
     trigger miss fallbacks (invariant across layers — a scan constant,
     not an xs).  ``slot_little`` (``ExpertStore.little_view``: resident
     int8 twins of every (L, E) expert, indexed ``[lid, e]``) feeds the
-    ``fallback="little"`` degradation rung — also a scan constant.  ``count_overlap`` threads to apply_moe's EP exchange
-    (hoist the count all_to_all ahead of the dispatch math)."""
+    ``fallback="little"`` degradation rung — also a scan constant.
+    ``slot_phase`` ("decode" | "prefill") selects the slot execution
+    regime per apply_moe: prefill-sized inputs assemble dense sweeps
+    with wave-streamed misses instead of the per-slot gathered path
+    (DESIGN.md §11).  ``count_overlap`` threads to apply_moe's EP
+    exchange (hoist the count all_to_all ahead of the dispatch math)."""
     prefix_pat, period_pat, n_super = scan_pattern(cfg)
     B, S = tokens.shape
     if positions is None:
@@ -152,7 +157,8 @@ def apply_model(params, tokens, cfg: ModelConfig, *, positions=None,
                                  slot_fetch=slot_fetch,
                                  slot_live=slot_live,
                                  slot_inject=slot_inject,
-                                 slot_little=slot_little)
+                                 slot_little=slot_little,
+                                 slot_phase=slot_phase)
         new_prefix_caches.append(c)
         infos.append(_trim_info(info, trace))
 
@@ -171,7 +177,8 @@ def apply_model(params, tokens, cfg: ModelConfig, *, positions=None,
                                      slot_fetch=slot_fetch,
                                      slot_live=slot_live,
                                      slot_inject=slot_inject,
-                                     slot_little=slot_little)
+                                     slot_little=slot_little,
+                                     slot_phase=slot_phase)
             x = hint(x, "batch", "res_seq", "embed")
             new_cs.append(c)
             step_infos.append(_trim_info(info, trace))

@@ -280,6 +280,101 @@ def slot_expert_ffn(slots, slot_fetch, xf, idx, gates, cfg: ModelConfig,
     return _combine_topk(ys, gates)
 
 
+def slot_expert_stacks(slots, slot_fetch, counts, cfg: ModelConfig,
+                       slot_inject=None, slot_little=None):
+    """Assemble FULL (E, ...) gate/up/down stacks for a prefill-sized
+    dense sweep from the physical-offload tiers (DESIGN.md §11).
+
+    Pooled experts gather their device slot rows (a pipelined store's
+    inject rows override the stale pool rows, §9); activated-but-missing
+    experts stream from the host store in rank-compacted waves of at
+    most ``slot_fetch.prefill_rows`` experts — each wave is one
+    ``lax.cond``-guarded ``pure_callback`` (an all-hit layer never pays
+    a host round trip), and because wave w+1's host gather depends only
+    on the routing counts — not on wave w's scatter or the FFN — the
+    runtime overlaps consecutive waves' host work with the device-side
+    scatters (intra-sweep double buffering).  Non-activated experts keep
+    zero rows: their capacity buckets are empty and the dense combine
+    never gathers their output rows (``se == e`` implies
+    ``counts[e] > 0``), so zeros are bit-safe and the assembled sweep is
+    bit-identical to full-resident prefill.
+
+    ``fallback="little"`` dequantizes the resident int8 twins into the
+    missing rows instead (no callback, rel-err-bounded);
+    ``fallback="host"`` leaves the missing rows zero and returns them in
+    ``need`` so the caller can run their (token, k) rows on the host.
+    Returns ``(stack_params, need)`` — ``need`` is all-False except for
+    the host tier."""
+    E = slots["slot_of"].shape[0]
+    dt = slots["gate"].dtype
+    d, f = slots["gate"].shape[1], slots["gate"].shape[2]
+    slot_of = slots["slot_of"]
+    pooled = slot_of >= 0
+    srow = jnp.clip(slot_of, 0)
+    pw = pooled[:, None, None]
+    wg = jnp.where(pw, slots["gate"][srow], 0)
+    wu = jnp.where(pw, slots["up"][srow], 0)
+    wd = jnp.where(pw, slots["down"][srow], 0)
+    if slot_inject is not None and "inj_of" in slots:
+        ipos = slots["inj_of"]                     # (E,) inject row or -1
+        use = ipos >= 0
+        irow = jnp.clip(ipos, 0)
+        uw = use[:, None, None]
+        wg = jnp.where(uw, slot_inject["gate"][irow], wg)
+        wu = jnp.where(uw, slot_inject["up"][irow], wu)
+        wd = jnp.where(uw, slot_inject["down"][irow], wd)
+        pooled = pooled | use
+    need = (counts > 0) & ~pooled
+    none = jnp.zeros((E,), bool)
+    if slot_fetch.fallback == "little":
+        if slot_little is None:
+            raise ValueError('fallback="little" needs the slot_little '
+                             "twin pool (ExpertStore.little_view())")
+        jax.lax.cond(
+            jnp.any(need),
+            lambda h: io_callback(slot_fetch.little_miss_cb,
+                                  jax.ShapeDtypeStruct((), jnp.int32), h),
+            lambda h: jnp.int32(0), ~need)
+        lid = slots["lid"]
+
+        def deq(qk, sk):
+            q = slot_little[qk][lid].astype(jnp.float32)   # (E, ..., out)
+            return (q * slot_little[sk][lid]).astype(dt)
+
+        nw = need[:, None, None]
+        wg = jnp.where(nw, deq("gate_q", "gate_s"), wg)
+        wu = jnp.where(nw, deq("up_q", "up_s"), wu)
+        wd = jnp.where(nw, deq("down_q", "down_s"), wd)
+        return {"gate": wg, "up": wu, "down": wd}, none
+    if slot_fetch.fallback == "host":
+        return {"gate": wg, "up": wu, "down": wd}, need
+    # "fetch": stream the missing activated experts in pool-budget waves
+    P = int(slot_fetch.prefill_rows)
+    n_waves = -(-E // P)                           # static unroll
+    rank = jnp.cumsum(need.astype(jnp.int32)) - 1  # (E,) rank among needed
+    shapes = (jax.ShapeDtypeStruct((P, d, f), dt),
+              jax.ShapeDtypeStruct((P, d, f), dt),
+              jax.ShapeDtypeStruct((P, f, d), dt))
+    for w in range(n_waves):
+        in_wave = need & (rank >= w * P) & (rank < (w + 1) * P)
+        rows = jnp.where(in_wave, rank - w * P, -1).astype(jnp.int32)
+        fg, fu, fd = jax.lax.cond(
+            jnp.any(in_wave),
+            lambda r: jax.pure_callback(slot_fetch.prefill_fetch_cb,
+                                        shapes, slots["lid"], r),
+            lambda r: tuple(jnp.zeros(s.shape, s.dtype) for s in shapes),
+            rows)
+        # invert rows -> expert-per-staging-row; experts outside the wave
+        # scatter to the dropped index P, staging pad rows land on E
+        dst = jnp.where(in_wave, rows, P)
+        e_of = jnp.full((P,), E, jnp.int32).at[dst].set(
+            jnp.arange(E, dtype=jnp.int32), mode="drop")
+        wg = wg.at[e_of].set(fg, mode="drop")
+        wu = wu.at[e_of].set(fu, mode="drop")
+        wd = wd.at[e_of].set(fd, mode="drop")
+    return {"gate": wg, "up": wu, "down": wd}, none
+
+
 # token-chunked execution: data-dependent dispatch gathers make GSPMD
 # replicate token-sized buffers, so bound them by scanning over chunks of
 # at most this many tokens (per-chunk capacity keeps the same expected
@@ -334,7 +429,8 @@ def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None,
               force_exchange: Optional[str] = None,
               count_overlap: Optional[bool] = None,
               slots=None, slot_fetch=None, slot_live=None,
-              slot_inject=None, slot_little=None):
+              slot_inject=None, slot_little=None,
+              slot_phase: str = "decode"):
     """Returns (y, info) where info carries DALI's routing observables.
 
     ``valid`` (T,) bool marks real tokens (None = all real): padded tokens
@@ -349,12 +445,18 @@ def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None,
     hoists the ragged exchange's tiny count all_to_all ahead of the
     dispatch index math so its round trip overlaps adjacent compute
     (DESIGN.md §9).  ``slots`` + ``slot_fetch`` (an ExpertStore)
-    select the physical-offload slot-pool path — decode-sized inputs
-    only; ``slot_live`` (T,) bool keeps dead batch slots from triggering
-    miss fallbacks; ``slot_inject`` carries a pipelined store's staged
-    insert rows (scan-constant global-row (buf_cap, ...) buffers, §9);
-    routing/workload observables stay identical to the other paths
-    (DESIGN.md §8)."""
+    select the physical-offload slot-pool path; ``slot_live`` (T,) bool
+    keeps dead batch slots from triggering miss fallbacks;
+    ``slot_inject`` carries a pipelined store's staged insert rows
+    (scan-constant global-row (buf_cap, ...) buffers, §9); routing/
+    workload observables stay identical to the other paths (DESIGN.md
+    §8).  ``slot_phase`` picks the slot execution regime: "decode"
+    (default) forces the gathered per-(token, k) path sized to a step's
+    activated slots; "prefill" keeps the normal ``use_sparse_path``
+    rule — prefill-sized inputs run the dense capacity sweep against
+    full (E, ...) stacks assembled from the pool plus wave-streamed
+    misses (``slot_expert_stacks``, DESIGN.md §11), and may chunk via
+    the scan below."""
     from repro.launch.sharding import hint
     from repro.models.moe_ep import apply_moe_ep, ep_applicable
     if force_path not in (None, "dense", "sparse"):
@@ -370,9 +472,12 @@ def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None,
         return apply_moe_ep(params, x, cfg, capacity=capacity,
                             force_exchange=force_exchange,
                             count_overlap=count_overlap)
-    if slots is not None and T_all > MOE_CHUNK_TOKENS:
+    if (slots is not None and T_all > MOE_CHUNK_TOKENS
+            and slot_phase != "prefill"):
         raise ValueError("the slot-pool path serves decode-sized steps; "
-                         f"{T_all} tokens exceed MOE_CHUNK_TOKENS")
+                         f"{T_all} tokens exceed MOE_CHUNK_TOKENS "
+                         "(prefill-sized inputs stream with "
+                         "slot_phase='prefill')")
     if T_all > MOE_CHUNK_TOKENS:
         n_chunks = -(-T_all // MOE_CHUNK_TOKENS)
         T_pad = n_chunks * MOE_CHUNK_TOKENS
@@ -392,8 +497,14 @@ def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None,
 
         def body(_, xv):
             x_chunk, v_chunk = xv
+            # slot state threads straight through: each chunk re-derives
+            # its own exact activated set and streams its own waves
             y, info = apply_moe(params, x_chunk, cfg, capacity=cap_c,
-                                valid=v_chunk, force_path=force_path)
+                                valid=v_chunk, force_path=force_path,
+                                slots=slots, slot_fetch=slot_fetch,
+                                slot_inject=slot_inject,
+                                slot_little=slot_little,
+                                slot_phase=slot_phase)
             return None, (y, info)
 
         _, (yc, infos) = jax.lax.scan(body, None, (xc, vc))
@@ -420,16 +531,25 @@ def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None,
     gates, idx, probs, logits = route(params, xf, m)
     vrep = None if valid is None else jnp.repeat(valid, K)      # (T*K,)
 
-    sparse = (slots is not None
-              or (force_path == "sparse" if force_path is not None
-                  else use_sparse_path(m, T, capacity)))
+    # decode-phase slot inputs always take the gathered path (a step's
+    # activated slots are few); prefill-phase slot inputs follow the same
+    # static rule as full-resident execution, so the offloaded sweep
+    # shares the full-resident numerics path shape-for-shape
+    sparse = (force_path == "sparse" if force_path is not None
+              else ((slots is not None and slot_phase == "decode")
+                    or use_sparse_path(m, T, capacity)))
     if sparse:
         # ---- decode fast path: gathered grouped SwiGLU ------------------
         if slots is not None:
             # physical offload: weights from the device slot pool, misses
-            # from the host tier (serving/expert_store.py)
+            # from the host tier (serving/expert_store.py).  Prefill
+            # chunks reuse the dead-slot seam for their pad tokens:
+            # invalid rows must not trigger host round trips (their
+            # outputs are zeroed below either way)
+            live = slot_live if slot_live is not None else \
+                (valid if slot_phase == "prefill" else None)
             y = slot_expert_ffn(slots, slot_fetch, xf, idx, gates, cfg,
-                                live=slot_live, slot_inject=slot_inject,
+                                live=live, slot_inject=slot_inject,
                                 slot_little=slot_little)
         else:
             y = grouped_expert_ffn(params, xf, idx, gates, cfg)
@@ -444,7 +564,34 @@ def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None,
                                                    valid_rep=vrep)
 
         xe = hint(xe, "experts", "cap", "embed")
-        ye = expert_ffn_dense(params, xe, cfg, counts=counts)     # (E,C,d)
+        if slots is not None:
+            # physical-offload prefill sweep (DESIGN.md §11): assemble
+            # full stacks from pool + wave-streamed misses, then run the
+            # UNCHANGED dense FFN — output bucket [e, c] depends only on
+            # expert e's (byte-identical) rows, so the sweep is
+            # bit-identical to full-resident prefill
+            wps, host_need = slot_expert_stacks(
+                slots, slot_fetch, counts, cfg, slot_inject=slot_inject,
+                slot_little=slot_little)
+            ye = expert_ffn_dense(wps, xe, cfg, counts=counts)    # (E,C,d)
+            if slot_fetch.fallback == "host":
+                # CPU tier at (token, k)-row granularity — the decode
+                # host tier's proven callback contract; the device
+                # sweep already yields zero rows for missing experts
+                # (their assembled weights are zero), so host rows
+                # substitute into the combine below
+                host_hit = ~host_need[idx.reshape(-1)]
+                if vrep is not None:
+                    host_hit = host_hit | ~vrep
+                hshape = jax.ShapeDtypeStruct((T * K, d), ye.dtype)
+                ys_host = jax.lax.cond(
+                    jnp.any(~host_hit),
+                    lambda a: jax.pure_callback(
+                        slot_fetch.prefill_host_cb, hshape, *a),
+                    lambda a: jnp.zeros(hshape.shape, hshape.dtype),
+                    (slots["lid"], xf, idx.reshape(-1), host_hit))
+        else:
+            ye = expert_ffn_dense(params, xe, cfg, counts=counts) # (E,C,d)
         ye = hint(ye, "experts", "cap", "embed")
 
         # gather results back in sorted-slot order, zero dropped/invalid
@@ -454,6 +601,11 @@ def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None,
         contrib = ye[jnp.clip(se, 0, E - 1), jnp.clip(rank, 0, C - 1)]
         contrib = hint(jnp.where(keep_s[:, None], contrib, 0)[inv],
                        "tokens", "embed")
+        if slots is not None and slot_fetch.fallback == "host":
+            # host rows replace their (zero) device contributions; the
+            # keep mask applies the same capacity drops as full-resident
+            contrib = jnp.where((~host_hit & keep_s[inv])[:, None],
+                                ys_host.astype(contrib.dtype), contrib)
         y = jnp.sum(contrib.reshape(T, K, d)
                     * gates.astype(contrib.dtype)[..., None], axis=1)
         dropped = jnp.sum((se < E) & (rank >= C)).astype(jnp.int32)

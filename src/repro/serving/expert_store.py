@@ -301,7 +301,8 @@ class ExpertStore:
                  mode: str = "overlap", faults=None, cost_model=None,
                  watchdog=None, ladder=None, little=None, verify=None,
                  max_retries: int = 3, retry_backoff_s: float = 2e-3,
-                 probe_interval: int = 3, seed: int = 0):
+                 probe_interval: int = 3, seed: int = 0,
+                 prefill_rows=None):
         if cfg.moe is None:
             raise ValueError("ExpertStore needs an MoE architecture")
         if fallback not in FALLBACKS:
@@ -319,6 +320,14 @@ class ExpertStore:
         self.n_slots = n_slots
         self.max_moves = max_moves
         self.fallback = fallback
+        # prefill streaming budget (DESIGN.md §11): a prefill layer sweep
+        # ships its activated-but-unpooled experts in waves of at most
+        # this many rows, so the transient staging stays pool-budget
+        # sized no matter how many experts the chunk activates
+        self.prefill_rows = int(prefill_rows) if prefill_rows else n_slots
+        if not 0 < self.prefill_rows <= self.E:
+            raise ValueError(f"prefill_rows={self.prefill_rows} must be in "
+                             f"1..n_experts={self.E}")
         self._act = _np_act(cfg.act)
 
         prefix_moe, scan_moe, n_super = moe_layer_layout(cfg)
@@ -367,6 +376,14 @@ class ExpertStore:
             "restaged_rows": 0,      # flagged rows re-gathered + re-shipped
             "probes": 0,             # health-probe transfers issued
             "little_steps": 0,       # steps served with streaming suspended
+            # prefill streaming (DESIGN.md §11) — separate from the
+            # decode h2d/fallback counters so per-phase breakdowns and
+            # per-request decode fallback rates stay clean
+            "prefill_fetch_rows": 0,   # experts wave-streamed into sweeps
+            "prefill_h2d_bytes": 0,    # bus bytes of those waves (padded)
+            "prefill_waves": 0,        # cond-fired waves
+            "prefill_host_rows": 0,    # (token, k) rows the host tier ran
+            "prefill_stage_s": 0.0,    # host time in prefill gathers
         }
         self._drained = dict(self._tel)
         self._cur = np.full((self.n_layers, n_slots), -1, np.int32)
@@ -774,6 +791,95 @@ class ExpertStore:
         if n:
             self._bump("fallback_rows", n)
         return np.int32(n)
+
+    # -- prefill streaming (DESIGN.md §11) ---------------------------------
+
+    def prefill_fetch_cb(self, lid, rows):
+        """pure_callback target for one prefill wave: gather the wave's
+        activated-but-unpooled experts from the host store into a
+        (prefill_rows, ...) staging triple.  ``rows (E,)`` int32 maps
+        expert id -> staging row for this wave (-1 = not in this wave);
+        padding staging rows stay zero and are dropped by the caller's
+        scatter.  The whole padded buffer crosses the link, so the bytes
+        counter charges the full wave (like ``stage``'s pow2 padding)."""
+        t0 = time.perf_counter()
+        l = int(lid)
+        rows = np.asarray(rows)
+        ids = np.nonzero(rows >= 0)[0]
+        self._guard_transient("prefill-fetch")
+        P = self.prefill_rows
+        g = np.zeros((P, self.d, self.f), self.dtype)
+        u = np.zeros_like(g)
+        dn = np.zeros((P, self.f, self.d), self.dtype)
+        g[rows[ids]] = self.host["gate"][l, ids]
+        u[rows[ids]] = self.host["up"][l, ids]
+        dn[rows[ids]] = self.host["down"][l, ids]
+        self._bump("prefill_fetch_rows", len(ids))
+        self._bump("prefill_h2d_bytes", P * self.expert_bytes)
+        self._bump("prefill_waves", 1)
+        self._bump("prefill_stage_s", time.perf_counter() - t0)
+        return g, u, dn
+
+    def prefill_host_cb(self, lid, xf, flat_e, hit):
+        """pure_callback target for the prefill "host" tier: the decode
+        tier's row-wise contract (``host_ffn_cb``) accounted under the
+        prefill counters — run missing (token, k) slots' expert FFN on
+        the host (numpy, float32) and return (T·K, d) with miss rows
+        filled, hit rows zero.  Row granularity keeps the callback
+        operands small and layout-trivial (shipping the (E, C, d)
+        capacity buckets through the callback deadlocks the CPU
+        callback runtime); the caller applies the same capacity-drop
+        mask as the full-resident sweep."""
+        t0 = time.perf_counter()
+        l = int(lid)
+        xf = np.asarray(xf)
+        e = np.asarray(flat_e)
+        K = e.shape[0] // xf.shape[0]
+        ys = np.zeros((e.shape[0], self.d), xf.dtype)
+        rows = np.nonzero(~np.asarray(hit))[0]
+        self._guard_transient("prefill-host")
+        for r in rows:
+            x = xf[r // K].astype(np.float32)
+            wg = self.host["gate"][l, e[r]].astype(np.float32)
+            wu = self.host["up"][l, e[r]].astype(np.float32)
+            wd = self.host["down"][l, e[r]].astype(np.float32)
+            ys[r] = ((self._act(x @ wg) * (x @ wu)) @ wd).astype(ys.dtype)
+        self._bump("prefill_host_rows", len(rows))
+        self._bump("fallback_rows", len(rows))
+        self._bump("prefill_stage_s", time.perf_counter() - t0)
+        return ys
+
+    def prefill_barrier(self, off):
+        """Make the pool generation coherent before a prefill reads it.
+        Overlap keeps a staged-but-uncommitted plan between steps —
+        commit it now (admission happens at the step boundary, when the
+        device queue is idle, exactly where commit is safe); blocking is
+        always coherent and pipelined's fresh rows ride the inject seam
+        the prefill assembly also reads, so both are no-ops."""
+        if self._staged is not None:
+            return self.commit(off)
+        return off
+
+    def memory_layout(self) -> dict:
+        """Analytic device-bytes accounting for prefill-phase reports:
+        the resident pool, the transient per-layer (E, ...) stack one
+        prefill sweep assembles, the (prefill_rows, ...) staging buffer
+        a wave ships, the little twins (when built), and the
+        full-resident stack the offload replaces."""
+        pool = self.n_layers * self.n_slots * self.expert_bytes
+        stack = self.E * self.expert_bytes
+        staging = self.prefill_rows * self.expert_bytes
+        little = 0
+        if self._little is not None:
+            little = sum(int(np.asarray(v).nbytes)
+                         for v in self._little.values())
+        return {"pool_bytes": pool,
+                "prefill_stack_bytes": stack,
+                "prefill_staging_bytes": staging,
+                "little_bytes": little,
+                "prefill_peak_bytes": pool + stack + staging + little,
+                "full_resident_bytes": self.n_layers * self.E
+                * self.expert_bytes}
 
     # -- streaming updates -------------------------------------------------
 

@@ -37,9 +37,17 @@ right after the decode dispatch so they hide behind the step's compute
 at the price of one extra step of decision lag, and "pipelined" ships
 each step's plan as per-layer inject buffers the decode folds in-graph,
 keeping the copy off the critical path AND the decisions t+1-fresh,
-DESIGN.md §8–§9).  Prefill still runs against the full on-device params
-(prefill offload is a ROADMAP item), so physical mode changes decode
-only.
+DESIGN.md §8–§9).  Prefill streams through the SAME slot pool: each
+admission / wave sweep assembles its dense per-layer expert stacks from
+resident pool rows plus ``prefill_rows``-sized waves of staged misses,
+bit-identical to full-resident prefill (DESIGN.md §11) — so a
+physically-offloaded server never materializes the on-device expert
+stacks (``strip_expert_params``) for either phase.
+
+Construction routes through :mod:`repro.serving.spec`:
+``ServeSpec(...).resolve(params).server()`` is the canonical path; the
+legacy kwarg constructors below keep working behind a once-per-process
+``DeprecationWarning`` and resolve through the same spec internally.
 
 Telemetry is sync-free in both servers: the jitted DALI schedule folds
 per-step sums into a device-side accumulator and the aggregator drains it
@@ -64,53 +72,19 @@ import numpy as np
 from repro.core.engine import DaliConfig, TelemetryAggregator
 from repro.models.config import ModelConfig
 from repro.models.model import init_caches
-from repro.serving.expert_store import ExpertStore
-from repro.serving.steps import (ResilientDecode, init_serve_state,
-                                 make_admit_prefill, make_admit_step,
-                                 make_prefill_step, resolve_policy,
-                                 retire_slot)
-
-OFFLOAD_MODES = ("modeled", "blocking", "overlap", "pipelined")
+from repro.serving.spec import (OFFLOAD_MODES, ResolvedServe, ServeSpec,
+                                build_store, warn_legacy)
+from repro.serving.steps import make_admit_step, retire_slot
 
 
 def make_store(offload: str, params, cfg, policy, fallback: str = "fetch",
                faults=None, cost_model=None):
-    """Build the ExpertStore for a physical offload mode (None for
-    "modeled").  The pool is sized to the policy's maximum effective
-    resident set (cache ∪ prefetch) and the per-step copy budget to its
-    churn (prefetch + cache swaps).
-
-    ``faults`` (a schedule string / FaultSpec list / FaultInjector, see
-    serving/faults.py) arms the store's fault-injection + degradation
-    subsystem; ``cost_model`` supplies the link constants its watchdog
-    budgets deadlines from (default: the LOCAL_PC profile for ``cfg``).
-    Fault injection wraps the *physical* streaming path, so it is
-    meaningless — and rejected — with ``offload="modeled"``."""
-    if offload not in OFFLOAD_MODES:
-        raise ValueError(f"offload must be one of "
-                         f"{'|'.join(OFFLOAD_MODES)}, got {offload!r}")
-    if offload == "modeled":
-        if faults is not None:
-            raise ValueError('faults need a physical offload mode '
-                             '("blocking" | "overlap" | "pipelined"); '
-                             '"modeled" has no streaming path to inject '
-                             'into')
-        return None
-    if not (policy.schedules and cfg.moe is not None):
-        raise ValueError("physical offload requires an MoE architecture "
-                         "and a scheduling policy (policy != 'none')")
-    dcfg = policy.dcfg
-    moves = max(2, dcfg.prefetch_size + dcfg.u_size)
-    # pool = max effective resident set (cache ∪ prefetch) + one plan of
-    # slack: in-flight inserts land in slack instead of evicting experts
-    # the lagged plan still wants, and evicted-but-not-overwritten
-    # experts keep serving hits until their slot is reused
-    return ExpertStore(
-        params, cfg,
-        n_slots=min(cfg.moe.n_routed,
-                    dcfg.cache_size + dcfg.prefetch_size + moves),
-        max_moves=moves, fallback=fallback, mode=offload,
-        faults=faults, cost_model=cost_model)
+    """Legacy shim over :func:`repro.serving.spec.build_store` (the
+    store-sizing logic moved there so ``ServeSpec.resolve()`` owns the
+    one copy); kept for direct callers, deprecated."""
+    warn_legacy("make_store")
+    return build_store(offload, params, cfg, policy, fallback=fallback,
+                       faults=faults, cost_model=cost_model)
 
 
 @dataclass
@@ -233,49 +207,64 @@ class ContinuousBatchServer:
     serving benchmark compares identical definitions; ``max_new_tokens``
     bounds the total generated tokens."""
 
-    def __init__(self, params, cfg: ModelConfig, batch_size: int = 8,
-                 max_len: int = 256, eos_id: int = 1,
+    def __init__(self, params, cfg: Optional[ModelConfig] = None,
+                 batch_size: int = 8, max_len: int = 256, eos_id: int = 1,
                  dali_cfg: Optional[DaliConfig] = None, res_vecs=None,
                  min_bucket: int = 16, policy=None,
-                 offload: str = "modeled", faults=None, cost_model=None):
+                 offload: str = "modeled", faults=None, cost_model=None,
+                 resolved: Optional[ResolvedServe] = None):
+        if resolved is None:
+            # legacy kwarg surface: route through the same spec resolution
+            # (validation, store sizing, param stripping) the canonical
+            # ServeSpec.resolve(params).server() path uses
+            if cfg is None:
+                raise TypeError("ContinuousBatchServer needs cfg (legacy "
+                                "kwargs) or resolved= "
+                                "(ServeSpec.resolve(params).server())")
+            warn_legacy("ContinuousBatchServer(params, cfg, ...)")
+            resolved = ServeSpec.from_legacy(
+                cfg, server="continuous", policy=policy, dali_cfg=dali_cfg,
+                batch_size=batch_size, max_len=max_len, eos_id=eos_id,
+                min_bucket=min_bucket, offload=offload, faults=faults,
+                cost_model=cost_model).resolve(params)
+        spec = resolved.spec
         from repro.models.config import layer_pattern
-        if any(mixer == "mamba" for mixer, _ in layer_pattern(cfg)):
+        if any(mixer == "mamba" for mixer, _ in layer_pattern(spec.cfg)):
             # attention masks hide right-pad slots (pos = -1); a recurrent
             # SSM state has no such mask, so pad tokens would corrupt it
             raise ValueError(
                 "continuous batching requires attention caches; serve "
                 "SSM/hybrid archs with the 'wave' preset")
-        self.params = params
-        self.cfg = cfg
-        self.batch = batch_size
-        self.max_len = max_len
-        self.eos = eos_id
-        self.dali_cfg = dali_cfg
-        # validated here, at construction (registry names listed on error)
-        self.policy = resolve_policy(policy, cfg, dali_cfg)
-        self.offload = offload
-        self.store = make_store(offload, params, cfg, self.policy,
-                                faults=faults, cost_model=cost_model)
+        self._resolved = resolved
+        self.params = resolved.params   # expert stacks stripped (physical)
+        self.cfg = spec.cfg
+        self.batch = spec.batch_size
+        self.max_len = spec.max_len
+        self.eos = spec.eos_id
+        self.dali_cfg = spec.dali_cfg
+        self.policy = resolved.policy
+        self.offload = spec.offload.mode
+        self.store = resolved.store
         self.res_vecs = res_vecs
-        self.min_bucket = min_bucket
+        self.min_bucket = spec.min_bucket
         self.queue: deque[Request] = deque()
         self.metrics = ServeMetrics()
-        self._prefill = jax.jit(make_admit_prefill(cfg))
+        # admission prefill streams through the slot pool (physical modes)
+        self._prefill = jax.jit(resolved.admit_prefill())
         # resilient decode: one callable that swaps between the healthy/
         # degraded/little jitted variants as the store's ladder reacts
-        self._decode = ResilientDecode(cfg, policy=self.policy,
-                                       offload=self.store)
-        self._admit = jax.jit(make_admit_step(cfg))
+        self._decode = resolved.resilient_decode()
+        self._admit = jax.jit(make_admit_step(spec.cfg))
         # rolling (sliding-window) caches keep the LAST S_c positions of a
         # prefill chunk; right-pad beyond the window would evict real prompt
         # tokens, so such configs prefill at exact length (one compilation
         # per distinct prompt length instead of per bucket)
-        a = cfg.attn
+        a = spec.cfg.attn
         self._exact_prefill = bool(
             a is not None and a.sliding_window
-            and a.sliding_window < max_len)
+            and a.sliding_window < spec.max_len)
         # immutable zero template reused by every admission prefill
-        self._fresh_caches = init_caches(cfg, 1, max_len)
+        self._fresh_caches = init_caches(spec.cfg, 1, spec.max_len)
 
     def submit(self, req: Request):
         if not req.submitted_at:
@@ -291,9 +280,19 @@ class ContinuousBatchServer:
             _bucket_len(L, self.min_bucket, self.max_len)
         toks = np.zeros((1, Sb), np.int32)
         toks[0, :L] = req.prompt                     # RIGHT-pad (see steps)
-        first_tok, fresh = self._prefill(self.params, jnp.asarray(toks),
-                                         self._fresh_caches,
-                                         jnp.asarray(L, jnp.int32))
+        if self.store is not None:
+            # overlap mode may hold a staged-uncommitted plan from the
+            # last decode; commit it so the admission sweep reads a
+            # coherent pool (prefill_barrier, DESIGN.md §11)
+            state["offload"] = self.store.prefill_barrier(state["offload"])
+            first_tok, fresh = self._prefill(self.params, jnp.asarray(toks),
+                                             self._fresh_caches,
+                                             jnp.asarray(L, jnp.int32),
+                                             state["offload"])
+        else:
+            first_tok, fresh = self._prefill(self.params, jnp.asarray(toks),
+                                             self._fresh_caches,
+                                             jnp.asarray(L, jnp.int32))
         state = self._admit(state, fresh, first_tok,
                             jnp.asarray(slot, jnp.int32),
                             jnp.asarray(L, jnp.int32))
@@ -313,9 +312,7 @@ class ContinuousBatchServer:
     def run(self) -> List[Request]:
         B = self.batch
         finished: List[Request] = []
-        state = init_serve_state(self.cfg, B, self.max_len,
-                                 policy=self.policy, per_slot=True,
-                                 offload=self.store)
+        state = self._resolved.init_state(per_slot=True)
         slot_req: List[Optional[Request]] = [None] * B
         # physical offload: the previous step's cache ∪ prefetch decision,
         # pending lowering to a slot plan (double-buffer lag of one step)
@@ -399,29 +396,41 @@ class BatchServer:
     """Wave scheduler (compat preset): equal-padded waves decoded in
     lockstep.  See module docstring; prefer ContinuousBatchServer."""
 
-    def __init__(self, params, cfg: ModelConfig, batch_size: int = 8,
-                 max_len: int = 256, eos_id: int = 1,
+    def __init__(self, params, cfg: Optional[ModelConfig] = None,
+                 batch_size: int = 8, max_len: int = 256, eos_id: int = 1,
                  dali_cfg: Optional[DaliConfig] = None, res_vecs=None,
                  min_bucket: int = 16, policy=None,
-                 offload: str = "modeled", faults=None, cost_model=None):
-        self.params = params
-        self.cfg = cfg
-        self.batch = batch_size
-        self.max_len = max_len
-        self.eos = eos_id
-        self.dali_cfg = dali_cfg
-        # validated here, at construction (registry names listed on error)
-        self.policy = resolve_policy(policy, cfg, dali_cfg)
-        self.offload = offload
-        self.store = make_store(offload, params, cfg, self.policy,
-                                faults=faults, cost_model=cost_model)
+                 offload: str = "modeled", faults=None, cost_model=None,
+                 resolved: Optional[ResolvedServe] = None):
+        if resolved is None:
+            if cfg is None:
+                raise TypeError("BatchServer needs cfg (legacy kwargs) or "
+                                "resolved= "
+                                "(ServeSpec.resolve(params).server())")
+            warn_legacy("BatchServer(params, cfg, ...)")
+            resolved = ServeSpec.from_legacy(
+                cfg, server="wave", policy=policy, dali_cfg=dali_cfg,
+                batch_size=batch_size, max_len=max_len, eos_id=eos_id,
+                min_bucket=min_bucket, offload=offload, faults=faults,
+                cost_model=cost_model).resolve(params)
+        spec = resolved.spec
+        self._resolved = resolved
+        self.params = resolved.params   # expert stacks stripped (physical)
+        self.cfg = spec.cfg
+        self.batch = spec.batch_size
+        self.max_len = spec.max_len
+        self.eos = spec.eos_id
+        self.dali_cfg = spec.dali_cfg
+        self.policy = resolved.policy
+        self.offload = spec.offload.mode
+        self.store = resolved.store
         self.res_vecs = res_vecs
-        self.min_bucket = min_bucket
+        self.min_bucket = spec.min_bucket
         self.queue: deque[Request] = deque()
         self.metrics = ServeMetrics()
-        self._prefill = jax.jit(make_prefill_step(cfg, max_len))
-        self._decode = ResilientDecode(cfg, policy=self.policy,
-                                       offload=self.store)
+        # wave prefill streams through the slot pool (physical modes)
+        self._prefill = jax.jit(resolved.prefill_step())
+        self._decode = resolved.resilient_decode()
 
     def submit(self, req: Request):
         if not req.submitted_at:
@@ -461,11 +470,16 @@ class BatchServer:
 
         # per-wave state re-init also re-seeds the slot pool (the fresh
         # policy state draws a fresh random resident set)
-        state = init_serve_state(self.cfg, B, self.max_len,
-                                 policy=self.policy, offload=self.store)
+        state = self._resolved.init_state(batch=B)
         t0 = time.perf_counter()
-        tok, caches = self._prefill(self.params, jnp.asarray(prompts),
-                                    state["caches"])
+        if self.store is not None:
+            state["offload"] = self.store.prefill_barrier(state["offload"])
+            tok, caches = self._prefill(self.params, jnp.asarray(prompts),
+                                        state["caches"], None,
+                                        state["offload"])
+        else:
+            tok, caches = self._prefill(self.params, jnp.asarray(prompts),
+                                        state["caches"])
         tok.block_until_ready()
         t_pf = time.perf_counter()
         self.metrics.prefill_s += t_pf - t0

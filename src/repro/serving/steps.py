@@ -55,6 +55,8 @@ from repro.models.config import ModelConfig
 from repro.models.model import (apply_model, collect_policy_obs,
                                 init_caches)
 from repro.models.moe import expert_capacity
+from repro.serving.spec import (_internal, require_offload_policy,
+                                warn_legacy)
 
 
 def resolve_policy(policy, cfg: ModelConfig,
@@ -84,19 +86,49 @@ def resolve_policy(policy, cfg: ModelConfig,
     return policy
 
 
-def make_prefill_step(cfg: ModelConfig, max_len: int,
-                      moe_capacity: Optional[int] = None):
-    """Returns prefill(params, tokens (B,S), caches, cross_src) ->
-    (next_token (B,1), caches)."""
+def _offload_consts(offload, fallback):
+    """The trace-time constants a slot-reading step closes over: the
+    fallback-presenting store view and (for the little tier) the resident
+    int8 twin pool.  Shared by the decode and both prefill factories."""
+    slot_fetch = offload
+    slot_little = None
+    if offload is not None:
+        if fallback is not None and fallback != offload.fallback:
+            slot_fetch = _FallbackView(offload, fallback)
+        if (fallback or offload.fallback) == "little":
+            slot_little = offload.little_view()
+    return slot_fetch, slot_little
 
-    def prefill(params, tokens, caches, cross_src=None):
+
+def make_prefill_step(cfg: ModelConfig, max_len: int,
+                      moe_capacity: Optional[int] = None,
+                      offload=None, fallback=None):
+    """Returns prefill(params, tokens (B,S), caches, cross_src, off) ->
+    (next_token (B,1), caches).
+
+    ``offload`` (an :class:`~repro.serving.expert_store.ExpertStore`)
+    runs the prefill layer sweep through the physical slot path
+    (DESIGN.md §11): call with ``off=state["offload"]`` and params that
+    may be stripped of expert stacks — each MoE layer assembles its
+    dense sweep from the pool plus wave-streamed misses, bit-identical
+    to full-resident prefill.  Without ``offload`` the trailing ``off``
+    argument is ignored and the legacy signature is unchanged."""
+    slot_fetch, slot_little = _offload_consts(offload, fallback)
+
+    def prefill(params, tokens, caches, cross_src=None, off=None):
         S = tokens.shape[1]
         positions = jnp.arange(S, dtype=jnp.int32)
+        slot_kw = {}
+        if offload is not None:
+            slot_kw = dict(expert_slots=offload.build_view(off),
+                           slot_fetch=slot_fetch, slot_phase="prefill")
+            if slot_little is not None:
+                slot_kw["slot_little"] = slot_little
         logits, caches, _ = apply_model(params, tokens, cfg,
                                         positions=positions, caches=caches,
                                         cross_src=cross_src,
                                         moe_capacity=moe_capacity,
-                                        last_logit_only=True)
+                                        last_logit_only=True, **slot_kw)
         next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         return next_tok, caches
 
@@ -104,21 +136,34 @@ def make_prefill_step(cfg: ModelConfig, max_len: int,
 
 
 def make_admit_prefill(cfg: ModelConfig,
-                       moe_capacity: Optional[int] = None):
+                       moe_capacity: Optional[int] = None,
+                       offload=None, fallback=None):
     """Prefill for admission into a continuous batch: the prompt arrives
     RIGHT-padded to a bucket length, so positions 0..length-1 are real and
     the first generated token samples from the logit at ``length - 1``
     (identical to running the unpadded prompt alone — per-slot position
-    correctness).  Returns prefill(params, tokens (1,Sb), caches, length)
-    -> (next_token (1,1), caches).  Compiles once per bucket length."""
+    correctness).  Returns prefill(params, tokens (1,Sb), caches, length,
+    off) -> (next_token (1,1), caches).  Compiles once per bucket length.
 
-    def prefill(params, tokens, caches, length):
+    ``offload`` streams the admission sweep through the physical slot
+    path exactly like ``make_prefill_step`` — right-pad tokens route and
+    stream like real ones (bit-parity with the full-resident admission,
+    which also routes them)."""
+    slot_fetch, slot_little = _offload_consts(offload, fallback)
+
+    def prefill(params, tokens, caches, length, off=None):
         S = tokens.shape[1]
         positions = jnp.arange(S, dtype=jnp.int32)
+        slot_kw = {}
+        if offload is not None:
+            slot_kw = dict(expert_slots=offload.build_view(off),
+                           slot_fetch=slot_fetch, slot_phase="prefill")
+            if slot_little is not None:
+                slot_kw["slot_little"] = slot_little
         logits, caches, _ = apply_model(params, tokens, cfg,
                                         positions=positions, caches=caches,
                                         moe_capacity=moe_capacity,
-                                        logit_index=length - 1)
+                                        logit_index=length - 1, **slot_kw)
         next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         return next_tok, caches
 
@@ -220,17 +265,12 @@ def make_decode_step(cfg: ModelConfig, dali_cfg: Optional[DaliConfig] = None,
     closed over as ``slot_little``."""
     policy = resolve_policy(policy, cfg, dali_cfg)
     use_policy = policy.schedules and cfg.moe is not None
-    if offload is not None and not use_policy:
-        raise ValueError("physical offload (offload=) requires an MoE "
-                         "architecture and a scheduling policy — its slot "
-                         "plans are lowered from the policy's decisions")
-    slot_fetch = offload
-    slot_little = None
     if offload is not None:
-        if fallback is not None and fallback != offload.fallback:
-            slot_fetch = _FallbackView(offload, fallback)
-        if (fallback or offload.fallback) == "little":
-            slot_little = offload.little_view()
+        # legacy offload-kwarg construction; ServeSpec.resolve() builds
+        # this variant via ResolvedServe.decode_step() without warning
+        warn_legacy("make_decode_step(offload=...)")
+        require_offload_policy(policy, cfg)
+    slot_fetch, slot_little = _offload_consts(offload, fallback)
 
     def decode(params, state, res_vecs=None):
         per_slot = state["pos"].ndim == 1
@@ -326,8 +366,9 @@ class ResilientDecode:
         else:
             pol = self.offload.degraded_policy(self.policy)
             fb = "little" if rung == "little" else None
-        fn = make_decode_step(self.cfg, policy=pol, offload=self.offload,
-                              fallback=fb, **self._kw)
+        with _internal():      # variant builds are not legacy call sites
+            fn = make_decode_step(self.cfg, policy=pol, offload=self.offload,
+                                  fallback=fb, **self._kw)
         return jax.jit(fn) if self._jit else fn
 
     def react(self):
@@ -370,10 +411,10 @@ def init_serve_state(cfg: ModelConfig, batch: int, max_len: int,
     if policy.schedules and cfg.moe is not None:
         state["dali"] = policy.init()
     if offload is not None:
-        if "dali" not in state:
-            raise ValueError("physical offload requires a scheduling "
-                             "policy (its initial resident set seeds the "
-                             "slot pool)")
+        # legacy offload-kwarg construction; ServeSpec.resolve() reaches
+        # this via ResolvedServe.init_state() without warning
+        warn_legacy("init_serve_state(offload=...)")
+        require_offload_policy(policy, cfg)
         import numpy as np
         state["offload"] = offload.init_device_state(
             np.asarray(state["dali"]["resident"]))

@@ -1,0 +1,156 @@
+"""ServeSpec construction API (serving/spec.py):
+
+(a) the offload↔policy contract raises ONE shared error message from
+    every entry point — spec resolve, the make_store shim, legacy
+    make_decode_step and legacy init_serve_state;
+(b) mode/faults validation is centralized (bad mode lists the modes,
+    faults are rejected on "modeled") and reachable through resolve();
+(c) legacy kwarg surfaces emit a once-per-process DeprecationWarning
+    and produce the SAME serving outputs as spec construction (the
+    back-compat contract examples/offload_ablation.py and
+    benchmarks/serving_throughput.py rely on);
+(d) resolve() strips expert stacks from the served params exactly for
+    physical modes (opt out via strip_params=False).
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.serving.spec as spec_mod
+from repro.configs import get_config, make_smoke
+from repro.models.model import init_model
+from repro.serving.spec import OffloadSpec, ServeSpec
+from repro.serving.steps import (init_serve_state, make_decode_step,
+                                 resolve_policy)
+
+
+def _cfg(n_routed=16):
+    cfg = make_smoke(get_config("mixtral-8x7b")).replace(n_layers=4)
+    return cfg.replace(moe=dataclasses.replace(cfg.moe, n_routed=n_routed))
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = _cfg()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# --------------------------------------------------------------------------
+# (a) one contract, one message, every entry point
+# --------------------------------------------------------------------------
+
+def test_offload_policy_error_is_shared(model):
+    cfg, params = model
+    # spec resolve: physical offload with a non-scheduling policy
+    with pytest.raises(ValueError, match="scheduling policy"):
+        ServeSpec(cfg=cfg, policy="none",
+                  offload=OffloadSpec(mode="blocking")).resolve(params)
+    # legacy make_store shim
+    from repro.serving.scheduler import make_store
+    null = resolve_policy("none", cfg)
+    with pytest.raises(ValueError, match="scheduling policy"):
+        make_store("blocking", params, cfg, null)
+    # legacy step factories, handed a store but no scheduling policy
+    store = ServeSpec(cfg=cfg, policy="dali",
+                      offload=OffloadSpec(mode="blocking")
+                      ).resolve(params).store
+    with pytest.raises(ValueError, match="scheduling policy"):
+        make_decode_step(cfg, policy="none", offload=store)
+    with pytest.raises(ValueError, match="scheduling policy"):
+        init_serve_state(cfg, 2, 32, policy="none", offload=store)
+
+
+def test_bad_offload_mode_lists_modes(model):
+    cfg, params = model
+    with pytest.raises(ValueError, match="modeled"):
+        ServeSpec(cfg=cfg, policy="dali",
+                  offload=OffloadSpec(mode="bogus")).resolve(params)
+
+
+def test_faults_rejected_on_modeled(model):
+    cfg, params = model
+    with pytest.raises(ValueError, match="physical offload mode"):
+        ServeSpec(cfg=cfg, policy="dali",
+                  offload=OffloadSpec(mode="modeled",
+                                      faults="transient_stall")
+                  ).resolve(params)
+
+
+# --------------------------------------------------------------------------
+# (c) legacy kwargs: warn once, serve identically
+# --------------------------------------------------------------------------
+
+def test_legacy_constructor_warns_spec_does_not(model):
+    cfg, params = model
+    from repro.serving.scheduler import ContinuousBatchServer
+    spec_mod._WARNED.discard("ContinuousBatchServer(params, cfg, ...)")
+    with pytest.warns(DeprecationWarning, match="ServeSpec"):
+        ContinuousBatchServer(params, cfg, batch_size=2, max_len=32,
+                              policy="dali")
+    # once per process: the second legacy construction is silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        ContinuousBatchServer(params, cfg, batch_size=2, max_len=32,
+                              policy="dali")
+        # spec construction never warns
+        ServeSpec(cfg=cfg, policy="dali", batch_size=2,
+                  max_len=32).resolve(params).server()
+
+
+def test_legacy_and_spec_servers_serve_identically(model):
+    cfg, params = model
+    from repro.serving.scheduler import ContinuousBatchServer, Request
+
+    def outputs(server):
+        rng = np.random.default_rng(31)
+        for i, n in enumerate((9, 12)):
+            server.submit(Request(
+                rid=i, prompt=rng.integers(1, cfg.vocab, n)
+                .astype(np.int32), max_new_tokens=3))
+        return {r.rid: r.output for r in server.run()}
+
+    legacy = ContinuousBatchServer(params, cfg, batch_size=2, max_len=32,
+                                   policy="dali", offload="pipelined")
+    via_spec = ServeSpec(cfg=cfg, policy="dali", batch_size=2, max_len=32,
+                         offload=OffloadSpec(mode="pipelined")
+                         ).resolve(params).server()
+    assert outputs(legacy) == outputs(via_spec)
+
+
+# --------------------------------------------------------------------------
+# (d) param stripping follows the offload mode
+# --------------------------------------------------------------------------
+
+def _has_expert_stacks(params):
+    # scanned layers stack expert weights as (L, E, d_model, d_ff);
+    # strip_expert_params drops the gate/up/down keys entirely
+    mlp = params["scan"][0]["mlp"]
+    return any(k in mlp for k in ("gate", "up", "down"))
+
+
+def test_resolve_strips_params_for_physical_modes_only(model):
+    cfg, params = model
+    assert _has_expert_stacks(params)
+    rs = ServeSpec(cfg=cfg, policy="dali").resolve(params)
+    assert rs.store is None and _has_expert_stacks(rs.params)
+    rs = ServeSpec(cfg=cfg, policy="dali",
+                   offload=OffloadSpec(mode="blocking")).resolve(params)
+    assert rs.store is not None and not _has_expert_stacks(rs.params)
+    rs = ServeSpec(cfg=cfg, policy="dali",
+                   offload=OffloadSpec(mode="blocking", strip_params=False)
+                   ).resolve(params)
+    assert rs.store is not None and _has_expert_stacks(rs.params)
+
+
+def test_prefill_rows_validated(model):
+    cfg, params = model
+    with pytest.raises(ValueError, match="prefill_rows"):
+        ServeSpec(cfg=cfg, policy="dali",
+                  offload=OffloadSpec(mode="blocking", prefill_rows=99)
+                  ).resolve(params)
