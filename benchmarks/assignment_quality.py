@@ -4,7 +4,6 @@ MoE execution time, solve overhead (measured wall-clock of the actual
 solvers), and CPU/GPU load balance."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import Csv, SHORT, load_model
 from repro.core.simulator import FrameworkSpec, simulate

@@ -22,7 +22,6 @@ import os
 from typing import Dict, List
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import time_fn
 from repro.models.config import ModelConfig, MoEConfig

@@ -5,8 +5,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import BENCH_MODELS, SHORT, Csv, load_model
-from repro.core.prefetch import prefetch_accuracy, top_workload_experts
+from benchmarks.common import SHORT, Csv, load_model
+from repro.core.prefetch import prefetch_accuracy
 
 
 def measure(bm, trace, pf, k: int) -> float:

@@ -2,10 +2,8 @@
 and the (w_size, u_size) replacement parameters."""
 from __future__ import annotations
 
-import numpy as np
 
-from benchmarks.cache_hitrate import hit_rate
-from benchmarks.common import Csv, SHORT, load_model
+from benchmarks.common import Csv, load_model
 from repro.core.cache import WorkloadAwareCache
 from repro.core.simulator import FrameworkSpec, simulate
 

@@ -1,0 +1,31 @@
+"""Static graph-contract auditing for the serving hot path (DESIGN.md
+§12).
+
+Every headline property of this reproduction — bit-exact slot-pool
+decode/prefill, donation-based O(rows) commits, cond-guarded miss tiers,
+``strip_expert_params`` actually stripping — is a *graph-level*
+invariant.  This package proves them per build, statically, on the
+compiled artifacts:
+
+* :mod:`repro.analysis.jaxpr_audit` — walks the closed jaxprs / compiled
+  HLO of every serving entry point (decode per offload mode x ladder
+  rung, prefill, admission, store jits, policy step) and enforces the
+  contract table: callback allowlist + cond guarding, donation aliasing,
+  weight-capture budget, transfer/sync census.
+* :mod:`repro.analysis.cost_audit` — extracts per-mode H2D bytes and
+  FLOPs from HLO text (via ``launch/hloparse``) and cross-checks them
+  against :class:`~repro.core.cost_model.CostModel` predictions.
+* :mod:`repro.analysis.lint` — AST lint for repo conventions (no bare
+  ``assert`` on serving paths, no host syncs in hot hooks, callbacks
+  only via registered seams, telemetry only under the store lock).
+* :mod:`repro.analysis.audit` — the ``python -m repro.analysis.audit``
+  CLI gating CI, with ``--self-test`` seeded-violation fixtures proving
+  the auditor fails loudly, not vacuously.
+
+Any resolved server can self-audit: ``ServeSpec(...).resolve(params)
+.audit()``.
+"""
+from repro.analysis.contracts import (GraphContract, GraphContractError,
+                                      Violation)
+
+__all__ = ["GraphContract", "GraphContractError", "Violation"]

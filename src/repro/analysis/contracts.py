@@ -1,0 +1,142 @@
+"""The declarative contract table the graph audits enforce (DESIGN.md
+§12), and the violation/report types every audit emits.
+
+A contract is *facts about compiled artifacts*, not about runtime
+behaviour: which host callbacks a serving graph may contain and how they
+must be guarded, which jit arguments must be donated (actually aliased
+input->output by XLA, not silently copied), how large a constant a
+stripped-params graph may capture, and how many unguarded host
+transfers a hot-path step may perform (zero).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+# violation codes — one per distinct defect class; the seeded-violation
+# self-test (analysis/selftest.py) proves each fires with its own code
+E_CALLBACK_UNREGISTERED = "E_CALLBACK_UNREGISTERED"
+E_CALLBACK_UNGUARDED = "E_CALLBACK_UNGUARDED"
+E_CALLBACK_KIND = "E_CALLBACK_KIND"
+E_DONATION_DROPPED = "E_DONATION_DROPPED"
+E_CONST_CAPTURE = "E_CONST_CAPTURE"
+E_SYNC_CENSUS = "E_SYNC_CENSUS"
+E_COST_DRIFT = "E_COST_DRIFT"
+E_ENTRY_BUILD = "E_ENTRY_BUILD"
+
+ALL_CODES = (E_CALLBACK_UNREGISTERED, E_CALLBACK_UNGUARDED,
+             E_CALLBACK_KIND, E_DONATION_DROPPED, E_CONST_CAPTURE,
+             E_SYNC_CENSUS, E_COST_DRIFT, E_ENTRY_BUILD)
+
+# no stripped-params serving graph may close over a constant larger than
+# this many bytes: one captured expert row (3 x d x f x dtype_bytes, the
+# smallest weight-capture regression) is far above it even on the smoke
+# config, while every legitimate closure constant observed across the
+# serving entry points is a few hundred bytes of routing indices
+MAX_CONST_BYTES = 65536
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One broken contract: a machine-readable code, the entry point it
+    was found in, and an actionable human detail."""
+    code: str
+    entry: str
+    detail: str
+
+    def __str__(self) -> str:
+        return f"[{self.code}] {self.entry}: {self.detail}"
+
+    def asdict(self) -> Dict[str, str]:
+        return dataclasses.asdict(self)
+
+
+class GraphContractError(RuntimeError):
+    """Raised by ``ResolvedServe.audit()`` / the CLI when any graph
+    contract is violated; carries the full violation list."""
+
+    def __init__(self, violations: List[Violation]):
+        self.violations = list(violations)
+        lines = "\n  ".join(str(v) for v in self.violations)
+        super().__init__(
+            f"{len(self.violations)} graph-contract violation(s):\n"
+            f"  {lines}")
+
+
+@dataclasses.dataclass
+class GraphContract:
+    """What one entry point's compiled artifact must satisfy.
+
+    max_const_bytes  — weight-capture budget for closure constants
+    allow_consts     — arrays legitimately closed over above the budget
+                       (the little rung's resident int8 twin pool); a
+                       const passes when it IS one of these (identity)
+                       or matches one's (shape, dtype)
+    donate           — flat entry-parameter indices that MUST be aliased
+                       input->output in the compiled executable
+    require_guarded  — every cond-required callback seam must sit under
+                       a ``lax.cond`` (the decode fast-path contract:
+                       zero host transfers on an all-hit step)
+    """
+    max_const_bytes: int = MAX_CONST_BYTES
+    allow_consts: Tuple[Any, ...] = ()
+    donate: Tuple[int, ...] = ()
+    require_guarded: bool = True
+
+    def const_allowed(self, const) -> bool:
+        nbytes = getattr(const, "nbytes", 0)
+        if nbytes <= self.max_const_bytes:
+            return True
+        for a in self.allow_consts:
+            if a is const:
+                return True
+            if (getattr(a, "shape", None) == getattr(const, "shape", None)
+                    and str(getattr(a, "dtype", "")) ==
+                    str(getattr(const, "dtype", ""))):
+                return True
+        return False
+
+
+@dataclasses.dataclass
+class EntryPoint:
+    """One audited serving entry point: an (unjitted) callable plus the
+    example arguments that fix its trace, and its contract."""
+    name: str
+    fn: Any
+    args: Tuple[Any, ...]
+    contract: GraphContract = dataclasses.field(default_factory=GraphContract)
+    # donation checks need a compile; jaxpr-level checks don't.  Entry
+    # points with a ``donate`` contract are compiled, the rest only
+    # traced — keeps the full-matrix audit fast enough for CI.
+    static_argnums: Tuple[int, ...] = ()
+    check_consts: bool = True
+
+
+def report_ok(report: Dict[str, Any]) -> bool:
+    return not report.get("violations")
+
+
+def merge_reports(reports: List[Dict[str, Any]]) -> Dict[str, Any]:
+    out: Dict[str, Any] = {"reports": reports, "violations": []}
+    for r in reports:
+        out["violations"].extend(r.get("violations", []))
+    out["ok"] = not out["violations"]
+    return out
+
+
+def maybe_raise(report: Dict[str, Any],
+                raise_on_violation: bool = True) -> Dict[str, Any]:
+    viols = report.get("violations", [])
+    if viols and raise_on_violation:
+        raise GraphContractError([
+            v if isinstance(v, Violation) else Violation(**v)
+            for v in viols])
+    return report
+
+
+def default_rungs(mode: str) -> Tuple[str, ...]:
+    """The ladder rungs that exist for an offload mode: physical modes
+    compile all three decode variants, "modeled" has no store (and so no
+    ladder) — only the healthy variant exists."""
+    return ("healthy", "degraded", "little") if mode != "modeled" \
+        else ("healthy",)

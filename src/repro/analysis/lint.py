@@ -1,0 +1,206 @@
+"""AST lint for repo conventions the generic linters can't know
+(DESIGN.md §12).  Run as ``python -m repro.analysis.lint`` (CI's lint
+job) or via ``python -m repro.analysis.audit --lint-only``.
+
+Rules:
+
+* **A001 bare-assert** — no ``assert`` statements in
+  ``src/repro/serving`` / ``src/repro/core``: serving-path invariants
+  must survive ``python -O``, so they raise typed exceptions instead.
+* **A002 host-sync-in-hook** — no ``.item()`` / ``float(...)`` /
+  ``int(...)`` on values inside the ``pre_step`` / ``post_dispatch``
+  hot hooks: each is a device sync on the step's critical path.
+* **A003 callback-site** — ``jax.pure_callback`` / ``io_callback`` may
+  only be CALLED from the seam helpers in ``models/moe.py`` (and the
+  auditor's own seeded-violation fixtures): every host seam must flow
+  through the registered-seam machinery the graph audit verifies.
+* **A004 telemetry-lock** — the store's ``_tel`` counter dict may only
+  be mutated inside ``_bump`` / ``drain`` / ``__init__`` (the methods
+  that hold ``_tel_lock``): callbacks bump from the runtime's callback
+  thread, so an unlocked mutation is a data race.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import sys
+from typing import Iterable, List, Optional
+
+REPO_SRC = os.path.normpath(
+    os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", ".."))
+#: directories whose asserts must survive ``python -O``
+ASSERT_FREE = (os.path.join("repro", "serving"),
+               os.path.join("repro", "core"))
+#: the hot hooks a device sync may not hide in
+HOT_HOOKS = ("pre_step", "post_dispatch")
+#: the only modules allowed to CALL a jax host callback
+CALLBACK_SITES = (os.path.join("repro", "models", "moe.py"),
+                  # the seeded-violation fixtures deliberately build
+                  # illegal graphs for the self-test to catch
+                  os.path.join("repro", "analysis", "selftest.py"))
+#: methods of ExpertStore that may mutate self._tel (they take the lock)
+TEL_MUTATORS = ("_bump", "drain", "__init__")
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    code: str
+    path: str
+    line: int
+    detail: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.detail}"
+
+    def asdict(self):
+        return dataclasses.asdict(self)
+
+
+def _rel(path: str) -> str:
+    try:
+        return os.path.relpath(path, REPO_SRC)
+    except ValueError:                  # pragma: no cover (windows drives)
+        return path
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, path: str, rel: str):
+        self.path = path
+        self.rel = rel
+        self.findings: List[LintFinding] = []
+        self._func_stack: List[str] = []
+        self.in_serving_core = any(d in rel for d in ASSERT_FREE)
+        self.callback_ok = any(self.rel.endswith(p)
+                               for p in CALLBACK_SITES)
+        self.is_store = rel.endswith(os.path.join("serving",
+                                                  "expert_store.py"))
+
+    # -- helpers -----------------------------------------------------------
+
+    def _find(self, code: str, node: ast.AST, detail: str):
+        self.findings.append(LintFinding(code, self.rel, node.lineno,
+                                         detail))
+
+    def _in_hot_hook(self) -> bool:
+        return bool(self._func_stack) and self._func_stack[-1] in HOT_HOOKS
+
+    def _in_tel_mutator(self) -> bool:
+        return any(f in TEL_MUTATORS for f in self._func_stack)
+
+    # -- rules -------------------------------------------------------------
+
+    def visit_FunctionDef(self, node):
+        self._func_stack.append(node.name)
+        self.generic_visit(node)
+        self._func_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Assert(self, node):
+        if self.in_serving_core:
+            self._find("A001", node,
+                       "bare assert on a serving path — raise a typed "
+                       "exception that survives python -O")
+        self.generic_visit(node)
+
+    def visit_Call(self, node):
+        f = node.func
+        if self._in_hot_hook():
+            if isinstance(f, ast.Attribute) and f.attr == "item":
+                self._find("A002", node,
+                           ".item() inside a hot hook is a device sync "
+                           "on the step's critical path")
+            if (isinstance(f, ast.Name) and f.id in ("float", "int")
+                    and node.args):
+                self._find("A002", node,
+                           f"{f.id}(...) inside a hot hook syncs the "
+                           f"device — hoist it off the critical path")
+        name = f.attr if isinstance(f, ast.Attribute) else (
+            f.id if isinstance(f, ast.Name) else None)
+        if name in ("pure_callback", "io_callback") \
+                and not self.callback_ok:
+            self._find("A003", node,
+                       f"{name} called outside the seam helpers in "
+                       f"models/moe.py — host seams must go through a "
+                       f"registered callback seam")
+        self.generic_visit(node)
+
+    def _check_tel_target(self, target, node):
+        # self._tel[...] = / += outside the lock-taking methods
+        if (isinstance(target, ast.Subscript)
+                and isinstance(target.value, ast.Attribute)
+                and target.value.attr == "_tel"
+                and not self._in_tel_mutator()):
+            self._find("A004", node,
+                       "telemetry counter mutated outside "
+                       "_bump()/drain() — callbacks bump from another "
+                       "thread, so this is a data race")
+
+    def visit_Assign(self, node):
+        if self.is_store:
+            for t in node.targets:
+                self._check_tel_target(t, node)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node):
+        if self.is_store:
+            self._check_tel_target(node.target, node)
+        self.generic_visit(node)
+
+
+def lint_file(path: str, rel: Optional[str] = None) -> List[LintFinding]:
+    rel = rel or _rel(path)
+    with open(path, encoding="utf-8") as fh:
+        src = fh.read()
+    return lint_source(src, rel)
+
+
+def lint_source(src: str, rel: str) -> List[LintFinding]:
+    """Lint one module's source text (the unit the tests drive)."""
+    tree = ast.parse(src, filename=rel)
+    v = _Visitor(rel, rel)
+    v.visit(tree)
+    return v.findings
+
+
+def iter_py_files(root: str) -> Iterable[str]:
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                yield os.path.join(dirpath, fn)
+
+
+def lint_tree(root: Optional[str] = None) -> List[LintFinding]:
+    root = root or os.path.join(REPO_SRC, "repro")
+    findings: List[LintFinding] = []
+    for path in iter_py_files(root):
+        findings.extend(lint_file(path))
+    return findings
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="repo-convention AST lint (DESIGN.md §12)")
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs to lint (default: src/repro)")
+    args = ap.parse_args(argv)
+    findings: List[LintFinding] = []
+    if args.paths:
+        for p in args.paths:
+            if os.path.isdir(p):
+                findings.extend(lint_tree(p))
+            else:
+                findings.extend(lint_file(p))
+    else:
+        findings = lint_tree()
+    for f in findings:
+        print(f)
+    print(f"lint: {len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

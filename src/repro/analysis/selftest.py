@@ -1,0 +1,133 @@
+"""Seeded-violation fixtures proving the auditor fails LOUDLY, not
+vacuously (DESIGN.md §12): each fixture builds a deliberately broken
+graph and must trip EXACTLY its expected violation code.  CI runs this
+via ``python -m repro.analysis.audit --self-test`` next to the green
+full-matrix audit — a green audit is only trustworthy alongside a red
+self-test.
+
+Fixtures:
+
+* ``const_capture``   — a graph closing over a deliberately captured
+  weight-sized constant (the ``strip_expert_params`` regression);
+* ``donation_dropped``— a donated buffer whose shape can't alias any
+  output, so XLA silently copies (the O(pool)-copy regression);
+* ``unregistered_callback`` — a ``pure_callback`` to a host function no
+  seam declares;
+* ``unguarded_callback``    — a registered cond-required seam called
+  OUTSIDE ``lax.cond`` (the decode fast-path regression);
+* ``sync_census``           — a stray ``jax.debug.print`` left on the
+  hot path (an unconditional host sync that is not a seam at all).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.contracts import (E_CALLBACK_UNGUARDED,
+                                      E_CALLBACK_UNREGISTERED,
+                                      E_CONST_CAPTURE, E_DONATION_DROPPED,
+                                      E_SYNC_CENSUS, EntryPoint,
+                                      GraphContract)
+from repro.analysis.jaxpr_audit import audit_entry
+from repro.models.moe import register_callback_seam
+
+# a "weight" well above the const budget, captured on purpose
+_BIG_WEIGHT = np.ones((256, 256), np.float32)          # 256 KiB
+
+
+def _host_identity(x):
+    return np.asarray(x)
+
+
+# the unguarded fixture needs a REGISTERED seam called outside cond —
+# registration itself is legal, the call site is the violation
+register_callback_seam("selftest_guarded", _host_identity, kind="pure",
+                       cond_required=True)
+
+
+def _fx_const_capture() -> EntryPoint:
+    big = jnp.asarray(_BIG_WEIGHT)
+
+    def f(x):
+        return x @ big
+
+    return EntryPoint(name="selftest/const_capture", fn=f,
+                      args=(jnp.zeros((2, 256), jnp.float32),))
+
+
+def _fx_donation_dropped() -> EntryPoint:
+    def f(x):
+        return x[:2] * 2.0          # output smaller than the donated input
+
+    return EntryPoint(name="selftest/donation_dropped", fn=f,
+                      args=(jax.ShapeDtypeStruct((8,), jnp.float32),),
+                      contract=GraphContract(donate=(0,)))
+
+
+def _fx_unregistered_callback() -> EntryPoint:
+    def _rogue(x):
+        return np.asarray(x)
+
+    def f(x):
+        shape = jax.ShapeDtypeStruct(x.shape, x.dtype)
+        return jax.lax.cond(
+            x.sum() > 0,
+            lambda a: jax.pure_callback(_rogue, shape, a),
+            lambda a: a, x)
+
+    return EntryPoint(name="selftest/unregistered_callback", fn=f,
+                      args=(jnp.zeros((4,), jnp.float32),))
+
+
+def _fx_unguarded_callback() -> EntryPoint:
+    def f(x):
+        shape = jax.ShapeDtypeStruct(x.shape, x.dtype)
+        # registered seam, but every step pays the host round trip
+        return jax.pure_callback(_host_identity, shape, x) + 1.0
+
+    return EntryPoint(name="selftest/unguarded_callback", fn=f,
+                      args=(jnp.zeros((4,), jnp.float32),))
+
+
+def _fx_sync_census() -> EntryPoint:
+    def f(x):
+        jax.debug.print("step {x}", x=x[0])   # forgotten debug print
+        return x * 2.0
+
+    return EntryPoint(name="selftest/sync_census", fn=f,
+                      args=(jnp.zeros((4,), jnp.float32),))
+
+
+FIXTURES = (
+    (_fx_const_capture, E_CONST_CAPTURE),
+    (_fx_donation_dropped, E_DONATION_DROPPED),
+    (_fx_unregistered_callback, E_CALLBACK_UNREGISTERED),
+    (_fx_unguarded_callback, E_CALLBACK_UNGUARDED),
+    (_fx_sync_census, E_SYNC_CENSUS),
+)
+
+
+def run_selftest() -> Dict[str, Any]:
+    """Run every seeded-violation fixture.  ``ok`` iff each produced
+    exactly its expected code — distinct and actionable, per fixture."""
+    import warnings
+    results: List[Dict[str, Any]] = []
+    ok = True
+    for build, expected in FIXTURES:
+        ep = build()
+        with warnings.catch_warnings():
+            # the donation fixture is broken ON PURPOSE; XLA's "donated
+            # buffers were not usable" warning is the expected symptom
+            warnings.simplefilter("ignore")
+            rec = audit_entry(ep)
+        codes = sorted({v.code for v in rec["violations"]})
+        hit = codes == [expected]
+        ok &= hit
+        results.append({"fixture": ep.name, "expected": expected,
+                        "got": codes, "ok": hit,
+                        "details": [str(v) for v in rec["violations"]]})
+    return {"ok": ok, "fixtures": results}

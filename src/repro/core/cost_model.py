@@ -116,7 +116,9 @@ class CostModel:
     @classmethod
     def for_config(cls, cfg: ModelConfig,
                    profile: HardwareProfile = LOCAL_PC) -> "CostModel":
-        assert cfg.moe is not None, "cost model applies to MoE layers"
+        if cfg.moe is None:
+            raise ValueError("cost model applies to MoE layers "
+                             "(cfg.moe is None)")
         return cls(profile=profile, d_model=cfg.d_model,
                    d_expert=cfg.moe.d_expert or cfg.d_ff,
                    dtype_bytes=2 if "16" in cfg.param_dtype else 4)

@@ -31,9 +31,9 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import (DaliConfig, Observation,  # noqa: F401
-                               _init_acc, _random_resident, make_policy,
-                               predict_next_workload)
+from repro.core.policy import (Observation, predict_next_workload,  # noqa: F401
+                               DaliConfig, _init_acc, _random_resident,
+                               make_policy)
 
 
 def init_dali_state(dcfg: DaliConfig, key=None):

@@ -17,7 +17,8 @@ def calibrate_residuals(traces: List[RoutingTrace]) -> List[np.ndarray]:
     """Accumulate Eq. 11 over all steps of the given calibration traces.
     Returns res_vecs[l] (d,) for l = 0..L-2 (last layer needs none) — the
     list is length L with a zero vector in the final slot for uniformity."""
-    assert traces, "need at least one calibration trace"
+    if not traces:
+        raise ValueError("need at least one calibration trace")
     L = traces[0].n_moe_layers
     d = traces[0].gate_in[0][0].shape[-1]
     acc = [np.zeros(d, np.float64) for _ in range(L)]

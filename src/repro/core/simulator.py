@@ -29,8 +29,8 @@ serving ablations can no longer diverge.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -42,7 +42,7 @@ from repro.core.cache import (BaseCache, LRUCache, ScoreCache, StaticCache,
 from repro.core.cost_model import CostModel
 from repro.core.prefetch import (BasePrefetcher, prefetch_accuracy,
                                  top_workload_experts)
-from repro.models.config import ModelConfig, layer_pattern
+from repro.models.config import ModelConfig
 
 
 # --------------------------------------------------------------------------

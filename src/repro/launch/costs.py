@@ -19,7 +19,6 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.models.config import ModelConfig, layer_pattern
-from repro.launch.sharding import estimate_params
 
 
 @dataclass

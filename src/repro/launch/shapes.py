@@ -21,13 +21,11 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import canonical, get_config
 from repro.launch import sharding as shd
-from repro.launch.mesh import axis_size, data_axes
-from repro.models.config import ModelConfig, layer_pattern
+from repro.models.config import ModelConfig
 from repro.models.model import init_caches, init_model
 from repro.models.moe import expert_capacity
 from repro.serving.steps import (default_dali_config, init_serve_state,

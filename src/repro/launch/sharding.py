@@ -16,13 +16,12 @@ from __future__ import annotations
 
 import contextlib
 import re
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.config import ModelConfig, scan_pattern
+from repro.models.config import ModelConfig
 
 # --------------------------------------------------------------------------
 # logical-axis hints

@@ -25,7 +25,6 @@ rows, so both conventions share one attention code path.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

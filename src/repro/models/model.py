@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from .blocks import apply_block, init_block, init_block_cache
-from .config import ModelConfig, layer_pattern, scan_pattern
+from .config import ModelConfig, scan_pattern
 from .layers import embed, init_embedding, init_norm, apply_norm, unembed
 
 

@@ -41,6 +41,62 @@ from .config import ModelConfig, MoEConfig
 from .layers import _ACTS, dense_init, init_mlp, apply_mlp
 
 
+# --------------------------------------------------------------------------
+# Callback seam registry (DESIGN.md §12)
+# --------------------------------------------------------------------------
+# Host callbacks are the ONLY host<->device seams a serving graph may
+# contain, and every one must be declared here so the graph-contract
+# auditor (repro/analysis/jaxpr_audit.py) can match each pure_callback /
+# io_callback equation in a lowered serving graph back to a known seam —
+# an unmatched callback in a serving graph is an audit failure.  Seams
+# are keyed on the underlying FUNCTION object (bound methods register
+# their ``__func__``): that is what jax's callback closure exposes, and
+# it survives proxies like ``steps._FallbackView`` that re-bind the same
+# class function to a different receiver.
+
+@dataclasses.dataclass(frozen=True)
+class CallbackSeam:
+    """One registered host<->device seam.
+
+    kind           — "pure" (jax.pure_callback) | "io" (io_callback)
+    cond_required  — the call site must sit under a ``lax.cond`` so an
+                     all-hit step never leaves the device (the decode
+                     fast-path contract)
+    """
+    name: str
+    kind: str
+    cond_required: bool = True
+    module: str = ""
+
+
+CALLBACK_SEAMS: dict = {}
+
+
+def register_callback_seam(name: str, func, *, kind: str = "pure",
+                           cond_required: bool = True) -> CallbackSeam:
+    """Declare ``func`` (a function or bound/unbound method) as a legal
+    callback target for serving graphs.  Idempotent per function."""
+    fn = getattr(func, "__func__", func)
+    seam = CallbackSeam(name=name, kind=kind, cond_required=cond_required,
+                        module=getattr(fn, "__module__", ""))
+    CALLBACK_SEAMS[fn] = seam
+    return seam
+
+
+def lookup_callback_seam(func):
+    """The :class:`CallbackSeam` registered for ``func`` (unwrapping
+    bound methods and ``functools.partial`` chains), or None."""
+    fn = func
+    while True:
+        if hasattr(fn, "__func__"):
+            fn = fn.__func__
+        elif hasattr(fn, "func") and callable(getattr(fn, "func")):
+            fn = fn.func                     # functools.partial
+        else:
+            break
+    return CALLBACK_SEAMS.get(fn)
+
+
 def expert_capacity(cfg_m: MoEConfig, n_tokens: int) -> int:
     if cfg_m.capacity_factor <= 0:          # "full": no token ever dropped
         return n_tokens

@@ -121,6 +121,7 @@ import jax.numpy as jnp
 
 from repro.core.cost_model import CostModel
 from repro.models.config import ModelConfig, scan_pattern
+from repro.models.moe import register_callback_seam
 from repro.serving.faults import (DEGRADED, HEALTHY, LITTLE,
                                   DegradationLadder, FaultInjector,
                                   HostReadError, LinkWatchdog,
@@ -644,7 +645,11 @@ class ExpertStore:
         policy's random initial cache) and return ``state["offload"]``."""
         resident = np.asarray(resident, bool)
         L, S = self.n_layers, self.n_slots
-        assert resident.shape == (L, self.E), resident.shape
+        if resident.shape != (L, self.E):
+            raise ValueError(
+                f"resident set must be (n_layers, n_experts) = "
+                f"({L}, {self.E}), got {resident.shape} — pass the "
+                f"policy's initial (L, E) bool cache mask")
         cur = np.full((L, S), -1, np.int32)
         pools = {k: np.zeros((L, S) + self.host[k].shape[2:], self.dtype)
                  for k in self.host}
@@ -1342,6 +1347,19 @@ for _n in ("fallback_rows", "fallback_fetches", "h2d_rows", "h2d_bytes",
            "stage_s", "commit_s"):
     setattr(ExpertStore, _n, _counter_property(_n))
 del _n
+
+
+# declare the host<->device seams this store exposes to serving graphs:
+# the graph-contract auditor (repro/analysis) rejects any callback
+# equation in a lowered serving graph that does not match one of these
+for _name, _fn, _kind in (
+        ("fetch_weights", ExpertStore.fetch_weights_cb, "pure"),
+        ("host_ffn", ExpertStore.host_ffn_cb, "pure"),
+        ("little_miss", ExpertStore.little_miss_cb, "io"),
+        ("prefill_fetch", ExpertStore.prefill_fetch_cb, "pure"),
+        ("prefill_host", ExpertStore.prefill_host_cb, "pure")):
+    register_callback_seam(_name, _fn, kind=_kind)
+del _name, _fn, _kind
 
 
 def strip_expert_params(params, cfg: ModelConfig):

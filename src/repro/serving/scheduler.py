@@ -72,7 +72,7 @@ import numpy as np
 from repro.core.engine import DaliConfig, TelemetryAggregator
 from repro.models.config import ModelConfig
 from repro.models.model import init_caches
-from repro.serving.spec import (OFFLOAD_MODES, ResolvedServe, ServeSpec,
+from repro.serving.spec import (ResolvedServe, ServeSpec,
                                 build_store, warn_legacy)
 from repro.serving.steps import make_admit_step, retire_slot
 
@@ -85,6 +85,22 @@ def make_store(offload: str, params, cfg, policy, fallback: str = "fetch",
     warn_legacy("make_store")
     return build_store(offload, params, cfg, policy, fallback=fallback,
                        faults=faults, cost_model=cost_model)
+
+
+class PromptTooLongError(ValueError):
+    """A submitted prompt does not fit the server's KV budget.
+
+    Raised by ``submit()`` (both servers) instead of a bare ``assert`` so
+    admission control survives ``python -O`` — a prompt of ``max_len``
+    tokens would leave no cache row for the first generated token."""
+
+    def __init__(self, n_tokens: int, max_len: int):
+        self.n_tokens = int(n_tokens)
+        self.max_len = int(max_len)
+        super().__init__(
+            f"prompt of {n_tokens} tokens exceeds max_len={max_len} "
+            f"(prompts must be < max_len so at least one generated "
+            f"token fits the cache)")
 
 
 @dataclass
@@ -269,8 +285,8 @@ class ContinuousBatchServer:
     def submit(self, req: Request):
         if not req.submitted_at:
             req.submitted_at = req.not_before or time.perf_counter()
-        assert len(req.prompt) < self.max_len, \
-            f"prompt of {len(req.prompt)} tokens exceeds max_len={self.max_len}"
+        if len(req.prompt) >= self.max_len:
+            raise PromptTooLongError(len(req.prompt), self.max_len)
         self.queue.append(req)
 
     def _admit_request(self, state, req: Request, slot: int):
@@ -435,6 +451,8 @@ class BatchServer:
     def submit(self, req: Request):
         if not req.submitted_at:
             req.submitted_at = req.not_before or time.perf_counter()
+        if len(req.prompt) >= self.max_len:
+            raise PromptTooLongError(len(req.prompt), self.max_len)
         self.queue.append(req)
 
     def run(self) -> List[Request]:

@@ -274,6 +274,29 @@ class ResolvedServe:
                                     policy=self.policy, per_slot=per_slot,
                                     seed=seed, offload=self.store)
 
+    def audit(self, rungs=None, raise_on_violation: bool = True,
+              with_costs: bool = False):
+        """Static graph-contract audit of THIS resolution's serving
+        entry points (repro/analysis, DESIGN.md §12): callback seams,
+        cond guarding, donation aliasing, weight-capture budget.
+        Returns the machine-readable report dict; raises
+        :class:`repro.analysis.GraphContractError` on any violation
+        unless ``raise_on_violation=False``.  ``with_costs=True``
+        additionally cross-checks HLO-extracted H2D bytes/FLOPs against
+        the :class:`~repro.core.cost_model.CostModel` (compiles the
+        decode step, so it is off by default for interactive use)."""
+        from repro.analysis.jaxpr_audit import audit_resolved
+        report = audit_resolved(self, rungs=rungs,
+                                raise_on_violation=raise_on_violation)
+        if with_costs:
+            from repro.analysis.cost_audit import audit_costs
+            from repro.analysis.contracts import maybe_raise
+            report["costs"] = audit_costs(self)
+            report["violations"].extend(report["costs"]["violations"])
+            report["ok"] = not report["violations"]
+            maybe_raise(report, raise_on_violation)
+        return report
+
     def server(self, res_vecs=None):
         """The server the spec names, constructed from this resolution
         (no re-resolve, no legacy warning)."""

@@ -44,7 +44,6 @@ one compiled function serves a batch whose composition changes every step.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -54,7 +53,6 @@ from repro.core.engine import DaliConfig
 from repro.models.config import ModelConfig
 from repro.models.model import (apply_model, collect_policy_obs,
                                 init_caches)
-from repro.models.moe import expert_capacity
 from repro.serving.spec import (_internal, require_offload_policy,
                                 warn_legacy)
 
@@ -360,7 +358,10 @@ class ResilientDecode:
         self._variants = {}
         self.active = "healthy"
 
-    def _build(self, rung: str):
+    def _build(self, rung: str, jit: Optional[bool] = None):
+        if rung not in self.RUNGS:
+            raise ValueError(f"rung must be one of {'|'.join(self.RUNGS)}, "
+                             f"got {rung!r}")
         if rung == "healthy" or self.offload is None:
             pol, fb = self.policy, None
         else:
@@ -369,7 +370,15 @@ class ResilientDecode:
         with _internal():      # variant builds are not legacy call sites
             fn = make_decode_step(self.cfg, policy=pol, offload=self.offload,
                                   fallback=fb, **self._kw)
-        return jax.jit(fn) if self._jit else fn
+        jit = self._jit if jit is None else jit
+        return jax.jit(fn) if jit else fn
+
+    def variant(self, rung: str, jit: Optional[bool] = None):
+        """A freshly built (uncached) decode variant for ``rung`` — the
+        graph auditor's enumeration hook (repro/analysis).  ``jit=False``
+        returns the raw python callable for jaxpr-level analysis without
+        touching the serving cache in ``_variants``."""
+        return self._build(rung, jit=jit)
 
     def react(self):
         """Align the active variant with the store's ladder state.

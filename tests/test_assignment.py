@@ -4,7 +4,6 @@ Property tests run under hypothesis when installed; on a clean environment
 the ``_hypothesis_compat`` shim executes them over a deterministic seeded
 sample instead, so ``pytest -x -q`` always collects and runs.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -1,0 +1,218 @@
+"""Direct units for launch/hloparse: trip-count expansion (including
+nested whiles), the per-collective byte model, unknown-dtype handling,
+and the entry-point facts (donation aliases, parameter bytes, dot FLOPs)
+the graph auditor reads off compiled executables."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hloparse import (collective_traffic, donated_params,
+                                   entry_param_bytes, hlo_flops,
+                                   shape_bytes, shape_dims,
+                                   split_computations, trip_count)
+
+jax.config.update("jax_platforms", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# shape parsing
+# ---------------------------------------------------------------------------
+
+def test_shape_bytes_basic():
+    assert shape_bytes("f32[4,8]") == 128
+    assert shape_bytes("bf16[10]") == 20
+    assert shape_bytes("s32[]") == 4
+    assert shape_bytes("pred[3]") == 3
+    # tuples sum their members
+    assert shape_bytes("(f32[4], s32[4])") == 16 + 16
+
+
+def test_shape_bytes_unknown_dtype_is_skipped():
+    # an analysis pass must degrade, not die, on a new XLA type
+    assert shape_bytes("f8e8m0fnu[16]") == 0
+    assert shape_bytes("token[]") == 0
+    assert shape_bytes("(token[], f32[2])") == 8
+
+
+def test_shape_bytes_fp8():
+    assert shape_bytes("f8e4m3fn[32]") == 32
+    assert shape_bytes("f8e5m2[8,2]") == 16
+
+
+def test_shape_dims():
+    assert shape_dims("f32[4,8]{1,0}") == ("f32", [4, 8])
+    assert shape_dims("s32[]") == ("s32", [])
+    assert shape_dims("no shapes here") is None
+
+
+# ---------------------------------------------------------------------------
+# trip counts: synthetic + real compiled whiles
+# ---------------------------------------------------------------------------
+
+def test_trip_count_prefers_known_trip_count():
+    cond = "%cond { %c = s32[] constant(999) }"
+    line = ('  %w = while((s32[]) %t), condition=%cond, body=%b, '
+            'backend_config={"known_trip_count":{"n":"10"}}')
+    assert trip_count(cond, line) == 10
+    # without the backend config: largest s32 constant in the condition
+    assert trip_count(cond, "%w = while(...)") == 999
+    assert trip_count("nothing here") == 1
+
+
+def _scan_hlo(n_outer, n_inner=None):
+    w = jnp.ones((4, 4), jnp.float32)
+
+    def inner(c, _):
+        return c @ w, ()
+
+    def outer(c, _):
+        if n_inner is None:
+            return c @ w, ()
+        c2, _ = jax.lax.scan(inner, c, None, length=n_inner)
+        return c2, ()
+
+    def f(x):
+        y, _ = jax.lax.scan(outer, x, None, length=n_outer)
+        return y
+
+    return jax.jit(f).lower(jnp.ones((4, 4), jnp.float32)) \
+        .compile().as_text()
+
+
+def test_hlo_flops_single_while_expansion():
+    # 10 iterations x one 4x4x4 matmul = 10 x 2*64*4 = 1280 flops; the
+    # tuple-typed while operand list must not defeat the while regex
+    hlo = _scan_hlo(10)
+    assert hlo_flops(hlo)["dot_flops"] == pytest.approx(1280.0)
+
+
+def test_hlo_flops_nested_while_multiplication():
+    # trip counts multiply: 3 outer x 5 inner x 128 = 1920
+    hlo = _scan_hlo(3, n_inner=5)
+    assert hlo_flops(hlo)["dot_flops"] == pytest.approx(1920.0)
+
+
+def test_hlo_flops_plain_dot():
+    hlo = jax.jit(lambda a, b: a @ b).lower(
+        jnp.ones((8, 16), jnp.float32),
+        jnp.ones((16, 4), jnp.float32)).compile().as_text()
+    # 2 x 8 x 4 x 16 = 1024
+    assert hlo_flops(hlo)["dot_flops"] == pytest.approx(1024.0)
+    assert hlo_flops(hlo)["_n_dot"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# per-collective byte model (synthetic HLO: no multi-device needed)
+# ---------------------------------------------------------------------------
+
+def _coll_module(kind, shape="f32[128]", groups="{{0,1,2,3}}"):
+    return f"""HloModule m
+
+ENTRY %main (p0: {shape}) -> {shape} {{
+  %p0 = {shape} parameter(0)
+  ROOT %c = {shape} {kind}({shape} %p0), replica_groups={groups}
+}}
+"""
+
+
+@pytest.mark.parametrize("kind,factor", [
+    ("all-gather", 3 / 4),          # (g-1)/g x result
+    ("all-reduce", 2 * 3 / 4),      # 2(g-1)/g x bytes
+    ("reduce-scatter", 3.0),        # (g-1) x result
+    ("all-to-all", 3 / 4),
+    ("collective-permute", 1.0),
+])
+def test_collective_byte_model(kind, factor):
+    tr = collective_traffic(_coll_module(kind))
+    assert tr[kind] == pytest.approx(512 * factor)
+    assert tr["total"] == pytest.approx(512 * factor)
+    assert tr["_n_" + kind] == 1
+
+
+def test_collective_inside_while_is_scaled():
+    hlo = """HloModule m
+
+%body (t: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %t = (s32[], f32[64]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[64]) %t), index=0
+  %x = f32[64] get-tuple-element((s32[], f32[64]) %t), index=1
+  %ar = f32[64] all-reduce(f32[64] %x), replica_groups={{0,1}}
+  ROOT %r = (s32[], f32[64]) tuple(s32[] %i, f32[64] %ar)
+}
+
+%cond (t: (s32[], f32[64])) -> pred[] {
+  %t = (s32[], f32[64]) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[64]) %t), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(s32[] %i, s32[] %n), direction=LT
+}
+
+ENTRY %main (p0: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %p0 = (s32[], f32[64]) parameter(0)
+  ROOT %w = (s32[], f32[64]) while((s32[], f32[64]) %p0), condition=%cond, body=%body
+}
+"""
+    tr = collective_traffic(hlo)
+    # 7 trips x 2(g-1)/g x 256B = 7 x 256 = 1792
+    assert tr["all-reduce"] == pytest.approx(7 * 256.0)
+    assert tr["_n_all-reduce"] == 7
+
+
+def test_unknown_dtype_collective_contributes_zero():
+    tr = collective_traffic(_coll_module("all-reduce",
+                                         shape="f4e2m1fn[256]"))
+    assert tr.get("all-reduce", 0.0) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# entry-point facts: donation + parameter bytes
+# ---------------------------------------------------------------------------
+
+def test_donated_params_real_jit():
+    def f(x, y):
+        return x + y, y * 2.0
+
+    a = jax.ShapeDtypeStruct((16,), jnp.float32)
+    hlo = jax.jit(f, donate_argnums=(0,)).lower(a, a).compile().as_text()
+    assert 0 in donated_params(hlo)
+
+
+def test_donated_params_dropped_on_mismatch():
+    # output smaller than the donated input: XLA can't alias, and the
+    # alias table must NOT claim it did
+    def f(x):
+        return x[:2] * 2.0
+
+    a = jax.ShapeDtypeStruct((8,), jnp.float32)
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        hlo = jax.jit(f, donate_argnums=(0,)).lower(a).compile().as_text()
+    assert 0 not in donated_params(hlo)
+
+
+def test_donated_params_absent_header():
+    assert donated_params("HloModule m\nENTRY %e (p: f32[2]) -> f32[2] "
+                          "{ ROOT %p = f32[2] parameter(0) }") == set()
+
+
+def test_entry_param_bytes():
+    def f(x, y, z):
+        return x.sum() + y.sum() + z.sum()
+
+    hlo = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((64,), jnp.float32),    # 256B
+        jax.ShapeDtypeStruct((32,), jnp.float32),    # 128B
+        jax.ShapeDtypeStruct((32,), jnp.int32),      # 128B
+    ).compile().as_text()
+    pb = entry_param_bytes(hlo)
+    assert pb == {0: 256, 1: 128, 2: 128}
+
+
+def test_split_computations_brace_balance():
+    hlo = _scan_hlo(4)
+    comps = split_computations(hlo)
+    # every computation body must be brace-balanced
+    for body in comps.values():
+        assert body.count("{") == body.count("}")
+    assert any("while(" in b for b in comps.values())

@@ -1,6 +1,5 @@
 """Pallas kernels vs pure-jnp oracles (interpret mode on CPU), with
 shape/dtype sweeps per the deliverable."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

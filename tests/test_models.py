@@ -1,17 +1,16 @@
 """Model-substrate correctness: MoE dispatch vs dense oracle, Mamba2 SSD
 chunked vs sequential recurrence, blockwise vs dense attention (property
 tests via hypothesis)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from _hypothesis_compat import given, settings, st
-from repro.configs import get_config, make_smoke
+from repro.configs import get_config
 from repro.models.attention import _mha, _mha_blockwise
-from repro.models.config import (AttentionConfig, MambaConfig, ModelConfig,
-                                 MoEConfig, layer_pattern, scan_pattern)
+from repro.models.config import (MambaConfig, ModelConfig, MoEConfig,
+                                 layer_pattern, scan_pattern)
 from repro.models.mamba import apply_mamba, init_mamba, init_mamba_cache
 from repro.models.moe import apply_moe, init_moe, route
 

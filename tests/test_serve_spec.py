@@ -19,7 +19,6 @@ import numpy as np
 import pytest
 
 import jax
-import jax.numpy as jnp
 
 import repro.serving.spec as spec_mod
 from repro.configs import get_config, make_smoke

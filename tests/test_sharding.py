@@ -1,13 +1,10 @@
 """Sharding-spec derivation unit tests (pure logic; the real multi-device
 lowering is exercised by launch/dryrun.py — see EXPERIMENTS.md §Dry-run)."""
-import types
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import get_config, make_smoke
+from repro.configs import get_config
 from repro.launch.costs import step_cost
 from repro.launch.hloparse import (collective_traffic, shape_bytes,
                                    split_computations, trip_count)

@@ -1,6 +1,5 @@
 """Offloading simulator invariants + cost-model sanity (paper §6
 methodology)."""
-import dataclasses
 
 import numpy as np
 import pytest

@@ -1,6 +1,5 @@
 """End-to-end system behaviour: train -> calibrate -> serve with the DALI
 engine, and the residual/prefetch/cache pipeline on real routing traces."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -8,12 +7,9 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config, make_smoke
-from repro.core.engine import DaliConfig
-from repro.core.prefetch import ResidualPrefetcher, prefetch_accuracy
 from repro.core.residual import calibrate_residuals, cosine_similarity
 from repro.core.tracing import (capture_decode_trace, capture_prefill_trace,
-                                gate_weights, moe_layer_indices)
-from repro.data.pipeline import MarkovCorpus
+                                moe_layer_indices)
 from repro.models.model import init_model
 from repro.serving.scheduler import BatchServer, Request
 from repro.serving.steps import (default_dali_config, init_serve_state,

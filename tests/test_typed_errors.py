@@ -1,0 +1,74 @@
+"""Regression tests for the typed exceptions that replaced bare asserts
+on serving/core paths (lint rule A001): each must raise — with an
+actionable message — even under ``python -O``, where an assert would
+silently wave the bad input through."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config, make_smoke
+from repro.core.cost_model import CostModel
+from repro.core.residual import calibrate_residuals
+from repro.models.model import init_model
+from repro.serving.scheduler import PromptTooLongError, Request
+from repro.serving.spec import OffloadSpec, ServeSpec
+
+jax.config.update("jax_platforms", "cpu")
+
+
+def _cfg(n_layers=2, n_routed=4):
+    cfg = make_smoke(get_config("mixtral-8x7b")).replace(n_layers=n_layers)
+    return cfg.replace(moe=dataclasses.replace(cfg.moe, n_routed=n_routed))
+
+
+@pytest.fixture(scope="module")
+def resolved():
+    cfg = _cfg()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return ServeSpec(cfg=cfg, policy="dali", batch_size=2, max_len=16,
+                     offload=OffloadSpec(mode="blocking")).resolve(params)
+
+
+def _long_prompt(n):
+    return Request(rid=0, prompt=np.ones((n,), np.int32))
+
+
+def test_continuous_server_rejects_long_prompt(resolved):
+    srv = resolved.server()                       # spec default: continuous
+    with pytest.raises(PromptTooLongError) as ei:
+        srv.submit(_long_prompt(16))     # == max_len: no room for 1 token
+    assert ei.value.n_tokens == 16
+    assert ei.value.max_len == 16
+    assert "max_len" in str(ei.value)
+    # a PromptTooLongError is still a ValueError for coarse handlers
+    assert isinstance(ei.value, ValueError)
+
+
+def test_batch_server_rejects_long_prompt(resolved):
+    import dataclasses as dc
+    srv = dc.replace(resolved, spec=dc.replace(resolved.spec,
+                                               server="wave")).server()
+    with pytest.raises(PromptTooLongError):
+        srv.submit(_long_prompt(99))
+    # boundary: max_len - 1 tokens is admissible
+    srv.submit(_long_prompt(15))
+
+
+def test_store_rejects_bad_resident_shape(resolved):
+    store = resolved.store
+    with pytest.raises(ValueError, match=r"\(n_layers, n_experts\)"):
+        store.init_device_state(np.ones((1, 1), bool))
+
+
+def test_cost_model_requires_moe_cfg():
+    cfg = _cfg().replace(moe=None)
+    with pytest.raises(ValueError, match="MoE"):
+        CostModel.for_config(cfg)
+
+
+def test_residual_requires_traces():
+    with pytest.raises(ValueError, match="calibration trace"):
+        calibrate_residuals([])
