@@ -145,6 +145,13 @@ def main():
                          "exchange, DESIGN.md §9); either way the "
                          "opposite setting is parity-checked")
     ap.add_argument("--reps", type=int, default=0)
+    ap.add_argument("--resilience", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="also run the degraded-link EP trial "
+                         "(repro/launch/ep_serve.py): healthy vs frozen "
+                         "placement vs watchdog-driven re-route under an "
+                         "injected slow link, asserting the bit-exact "
+                         "re-route contract (DESIGN.md §13)")
     ap.add_argument("--json", default=None,
                     help="output path (default reports/bench/"
                          "BENCH_ep_exchange.json)")
@@ -180,6 +187,25 @@ def main():
     worst = max(r["byte_ratio"] for r in skewed)
     print(f"\nzipf worst-case ragged/dense link bytes: {100 * worst:.0f}%")
 
+    resilience = None
+    if args.resilience:
+        from benchmarks.report_md import ep_resilience_table
+        from repro.launch.ep_serve import run_resilience_trials
+        resilience = run_resilience_trials(steps=20 if args.smoke else 26)
+        print()
+        for tr in resilience["trials"]:
+            fm = tr["fault_ms_per_step"]
+            fb = tr["fault_pair_bytes_per_step"]
+            print(f"ep_resilience_{tr['name']},"
+                  f"{1e3 * tr['ms_per_step']:.2f},"
+                  + (f"fault_window_ms={fm:.1f}"
+                     f" degraded_pair_kb={fb / 1e3:.1f}"
+                     f" reroutes={tr['reroutes']}" if fm else "healthy"))
+        print()
+        for line in ep_resilience_table(resilience):
+            print(line)
+        assert resilience["ok"], resilience["verdicts"]
+
     out = args.json or os.path.join(BENCH_DIR, "BENCH_ep_exchange.json")
     os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
     with open(out, "w") as f:
@@ -187,7 +213,8 @@ def main():
                    "E": E, "top_k": K, "d_model": D_MODEL,
                    "d_expert": D_EXPERT, "smoke": bool(args.smoke),
                    "count_overlap": bool(args.overlap),
-                   "reps": reps, "rows": rows}, f, indent=2)
+                   "reps": reps, "rows": rows,
+                   "resilience": resilience}, f, indent=2)
     print(f"wrote {out}")
 
 

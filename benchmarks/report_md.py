@@ -156,6 +156,19 @@ def ep_exchange_section():
     print("\n(C_x: exchanged bucket capacity, picked per step from the "
           "static ladder by the count exchange — see "
           "repro/models/moe_ep.py.)")
+    res = rec.get("resilience")
+    if res:
+        print("\n#### EP resilience: degraded-link expert re-route\n")
+        print(f"(fault={res['faults']} on the {res['topology']} fabric, "
+              f"tp={res['tp']}; outputs bit-identical across all trials: "
+              f"{'yes' if res['verdicts']['static_bit_exact'] and res['verdicts']['reroute_bit_exact'] else 'NO'})\n")
+        for line in ep_resilience_table(res):
+            print(line)
+        print("\n(fault-window ms/step charges the injected per-link "
+              "slowdown as wall time; degraded-pair KB is the analytic "
+              "demand crossing the slow link — the re-route moves the "
+              "victim's hot experts off it. See repro/launch/ep_serve.py, "
+              "DESIGN.md §13.)")
 
 
 def ep_exchange_table(rows):
@@ -169,6 +182,23 @@ def ep_exchange_table(rows):
                    f"| {r['cx']} | {100 * r['byte_ratio']:.0f}% "
                    f"| {r['dense_us']:.0f} | {r['ragged_us']:.0f} "
                    f"| {r['parity_max_err']:.1e} |")
+    return out
+
+
+def ep_resilience_table(res):
+    """Markdown table lines for the EP resilience record (single source
+    of the column layout — benchmarks/ep_exchange.py stdout uses it
+    too)."""
+    out = ["| trial | ms/step | fault-window ms/step | degraded-pair "
+           "KB/step | reroutes |",
+           "|---|---|---|---|---|"]
+    for tr in res["trials"]:
+        fm = tr["fault_ms_per_step"]
+        fb = tr["fault_pair_bytes_per_step"]
+        out.append(f"| {tr['name']} | {tr['ms_per_step']:.1f} "
+                   f"| {'—' if fm is None else f'{fm:.1f}'} "
+                   f"| {'—' if fb is None else f'{fb / 1e3:.1f}'} "
+                   f"| {tr['reroutes']} |")
     return out
 
 

@@ -82,10 +82,25 @@ def main():
     ap.add_argument("--cache-ratio", type=float, default=0.5)
     ap.add_argument("--no-dali", action="store_true")
     ap.add_argument("--faults", default=None,
-                    help="fault schedule for the offload path, e.g. "
-                         "'link_degrade:x12@8-26' or a preset name "
-                         "(link_degrade|transient_stall|read_error|"
-                         "corrupt_rows); requires a physical --offload")
+                    help="fault schedule for the offload path: comma-"
+                         "separated kind[SRC>DST][:xFACTOR][@START[-STOP]] "
+                         "specs — kind in link_degrade|transient_stall|"
+                         "read_error|corrupt_rows (bare kind = preset "
+                         "defaults); the optional [SRC>DST] link selector "
+                         "(link_degrade only) targets one directed fabric "
+                         "pair, '*' wildcards a side, 'host' names the "
+                         "host>device link, no selector = every link.  "
+                         "e.g. 'link_degrade:x12@8-26', "
+                         "'link_degrade[0>3]:x8@6-18,read_error@30'; "
+                         "requires a physical --offload")
+    ap.add_argument("--topology", default=None,
+                    help="per-link fabric spec "
+                         "(core/cost_model.parse_topology): 'flat', "
+                         "'island:K' (K-device NVLink-style islands), "
+                         "plus comma-separated 'SRC>DST:xF' slow-link or "
+                         "'SRC>DST:gGBPS[:lLAT]' absolute overrides, "
+                         "e.g. 'island:4,0>3:x8'; attaches per-link "
+                         "constants to the offload cost model")
     ap.add_argument("--check-exact", action="store_true",
                     help="re-serve the same workload without faults and "
                          "exit non-zero unless outputs are identical")
@@ -121,7 +136,8 @@ def main():
             cfg=cfg, server=args.server, policy=policy, dali_cfg=dali_cfg,
             batch_size=args.batch,
             max_len=args.prompt_len + args.max_new + 2,
-            offload=OffloadSpec(mode=offload, faults=faults))
+            offload=OffloadSpec(mode=offload, faults=faults,
+                                topology=args.topology))
         server = spec.resolve(params).server(res_vecs=res_vecs)
         rng = np.random.default_rng(args.seed + 2)
         for i in range(args.requests):
@@ -155,6 +171,12 @@ def main():
                   f"restaged={st.get('restaged_rows', 0)} "
                   f"little_steps={st.get('little_steps', 0)}"
                   + (f" | transitions: {trans}" if trans else ""))
+            for name, lr in sorted(server.metrics.links.items()):
+                print(f"   link {name}: misses={lr['deadline_misses']} "
+                      f"refits={lr['refits']} "
+                      f"refit_rej={lr['refit_rejections']} "
+                      f"degrade_events={lr['degrade_events']} "
+                      f"gbps={lr['gbps']:.3g}")
     print(f"   latency p50={np.percentile(lat, 50):.2f}s "
           f"p95={np.percentile(lat, 95):.2f}s"
           + (f" | ttft p50={np.percentile(ttft, 50):.2f}s" if ttft else ""))

@@ -484,6 +484,7 @@ def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None,
               valid=None, force_path: Optional[str] = None,
               force_exchange: Optional[str] = None,
               count_overlap: Optional[bool] = None,
+              placement=None, demand_view: bool = False,
               slots=None, slot_fetch=None, slot_live=None,
               slot_inject=None, slot_little=None,
               slot_phase: str = "decode"):
@@ -500,7 +501,10 @@ def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None,
     the EP path is taken; so does ``count_overlap`` (None = on), which
     hoists the ragged exchange's tiny count all_to_all ahead of the
     dispatch index math so its round trip overlaps adjacent compute
-    (DESIGN.md §9).  ``slots`` + ``slot_fetch`` (an ExpertStore)
+    (DESIGN.md §9).  ``placement`` / ``demand_view`` thread the
+    topology-aware expert re-route controls through to the EP path
+    (moe_ep.apply_moe_ep, DESIGN.md §13) and error off it.
+    ``slots`` + ``slot_fetch`` (an ExpertStore)
     select the physical-offload slot-pool path; ``slot_live`` (T,) bool
     keeps dead batch slots from triggering miss fallbacks;
     ``slot_inject`` carries a pipelined store's staged insert rows
@@ -527,7 +531,13 @@ def apply_moe(params, x, cfg: ModelConfig, *, capacity: Optional[int] = None,
         # all-to-all dispatch (see moe_ep.py / EXPERIMENTS.md §Perf)
         return apply_moe_ep(params, x, cfg, capacity=capacity,
                             force_exchange=force_exchange,
-                            count_overlap=count_overlap)
+                            count_overlap=count_overlap,
+                            placement=placement,
+                            demand_view=demand_view)
+    if placement is not None or demand_view:
+        raise ValueError("placement / demand_view are expert-parallel "
+                         "re-route controls (models/moe_ep.py) and "
+                         "require the EP path to be applicable")
     if (slots is not None and T_all > MOE_CHUNK_TOKENS
             and slot_phase != "prefill"):
         raise ValueError("the slot-pool path serves decode-sized steps; "

@@ -40,9 +40,90 @@ from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from .config import ModelConfig
+
+
+# --------------------------------------------------------------------------
+# topology-aware expert placement (DESIGN.md §13)
+# --------------------------------------------------------------------------
+
+def solve_placement(demand, topology, tp: Optional[int] = None) -> np.ndarray:
+    """Greedy expert→device placement against a link topology.
+
+    ``demand`` is the count exchange's global demand view — (E,) summed
+    per-expert token counts or the (tp, E) per-source matrix
+    (``info["ep_counts"]``).  Devices are ranked by
+    ``topology.device_quality()`` (bidirectional bottleneck bandwidth to
+    peers) and the hottest E/tp experts land on the best-connected
+    device, the next E/tp on the next, etc. — so a degraded link's
+    endpoints end up hosting the coldest experts and the traffic that
+    must cross the bad pair shrinks.  Ties (and a uniform topology) keep
+    the canonical identity layout so the healthy fast path never moves
+    weights for nothing.
+
+    Returns ``perm`` (E,) int32 with ``perm[p]`` = logical expert stored
+    at physical slot p; device k owns slots [k·E/tp, (k+1)·E/tp).
+    """
+    demand = np.asarray(demand, np.float64)
+    per_e = demand.sum(axis=0) if demand.ndim == 2 else demand
+    n = int(tp if tp is not None else topology.n)
+    E = per_e.size
+    if E % n:
+        raise ValueError(f"n_experts {E} must divide over {n} devices")
+    e_loc = E // n
+    if topology.is_uniform():
+        return np.arange(E, dtype=np.int32)
+    q = topology.device_quality()[:n]
+    dev_order = np.argsort(-q, kind="stable")      # best-connected first
+    hot = np.argsort(-per_e, kind="stable")        # hottest expert first
+    perm = np.empty(E, np.int32)
+    for rank, k in enumerate(dev_order):
+        # sort each device's expert list so equal-demand workloads keep
+        # a deterministic layout
+        mine = np.sort(hot[rank * e_loc:(rank + 1) * e_loc])
+        perm[k * e_loc:(k + 1) * e_loc] = mine
+    return perm
+
+
+def permute_expert_params(params, placement):
+    """Reorder the stacked expert weights to physical slot order (slot p
+    holds logical expert ``placement[p]``).  Applied OUTSIDE the jitted
+    step at re-route time, so placement changes swap an input array
+    instead of re-tracing or gathering weights in-graph; the router (and
+    shared experts) keep logical expert ids."""
+    perm = np.asarray(placement)
+    out = dict(params)
+    for k in ("gate", "up", "down"):
+        out[k] = jnp.asarray(params[k])[perm]
+    return out
+
+
+def placement_pair_bytes(demand, placement, d_model: int,
+                         itemsize: int) -> np.ndarray:
+    """Analytic directed per-pair exchange bytes under a placement.
+
+    ``jax.lax.all_to_all`` physically ships EQUAL-size blocks to every
+    peer, so per-pair wire bytes are accounted from demand (the repo's
+    ``link_bytes`` convention, DESIGN.md §2): tokens from source s to an
+    expert owned by device k cross s->k once at dispatch and k->s once
+    on the return.  ``demand`` is the (tp, E) per-source count matrix
+    (``info["ep_counts"]``); returns a (tp, tp) int64 byte matrix with a
+    zero diagonal (local traffic is free).
+    """
+    demand = np.asarray(demand, np.int64)
+    tp, E = demand.shape
+    e_loc = E // tp
+    perm = np.asarray(placement, np.int64)
+    owner = np.empty(E, np.int64)
+    owner[perm] = np.arange(E, dtype=np.int64) // e_loc
+    onehot = np.zeros((E, tp), np.int64)
+    onehot[np.arange(E), owner] = 1
+    disp = (demand @ onehot) * (d_model * itemsize)   # (src, dst) tokens
+    np.fill_diagonal(disp, 0)
+    return disp + disp.T
 
 
 def ep_applicable(cfg: ModelConfig, B: int, S: int) -> bool:
@@ -110,7 +191,9 @@ def _ep_expert_ffn(xa, wg, wu, wd, cnt_rx, cfg: ModelConfig):
 def apply_moe_ep(params, x, cfg: ModelConfig, *,
                  capacity: Optional[int] = None,
                  force_exchange: Optional[str] = None,
-                 count_overlap: Optional[bool] = None):
+                 count_overlap: Optional[bool] = None,
+                 placement=None,
+                 demand_view: bool = False):
     """shard_map expert-parallel MoE.  x (B,S,d) -> (y, info).
 
     ``capacity`` (stated for the full batch, like apply_moe's) scales to
@@ -131,7 +214,25 @@ def apply_moe_ep(params, x, cfg: ModelConfig, *,
     math, the FSDP weight gathers and the shared-expert MLP instead of
     stalling the bucket exchange (DESIGN.md §9).  The counts are the
     same ``bincount`` ``local_dispatch`` later computes, so outputs,
-    ``ep_cx`` and drops are bit-identical with the overlap off."""
+    ``ep_cx`` and drops are bit-identical with the overlap off.
+
+    ``placement`` re-routes expert ownership across the 'model' axis
+    (DESIGN.md §13): an (E,) int32 permutation with ``placement[p]`` =
+    logical expert hosted at physical slot p, whose expert weight
+    stacks the caller has already reordered via
+    ``permute_expert_params`` (host-level, so a re-route swaps input
+    arrays without re-tracing).  In-graph the send blocks and exchanged
+    counts are permuted to physical order before the all_to_alls and
+    the returned buckets un-permuted after — every expert still sees
+    exactly its own tokens and weights, so outputs are bit-identical to
+    the identity placement; only WHICH device computes each expert (and
+    therefore which fabric links its traffic crosses) changes.
+    ``placement=None`` is the identity fast path (no permute gathers).
+
+    ``demand_view`` adds ``info["ep_counts"]``, the (tp, E) per-source
+    capped demand matrix (one tiny int32 all_gather of the counts the
+    exchange already computes) — the global demand view the topology
+    placement solver and the per-link byte accounting consume."""
     from jax.experimental.shard_map import shard_map
     from repro.launch import sharding as shd
     from repro.models.layers import apply_mlp
@@ -165,6 +266,12 @@ def apply_moe_ep(params, x, cfg: ModelConfig, *,
     ragged = force_exchange != "dense"
     overlap = True if count_overlap is None else count_overlap
     caps = exchange_ladder(C)
+    placed = placement is not None
+    # always an operand (spec'd replicated): when the identity fast path
+    # is taken it is simply unused and DCE'd, and when a re-route lands
+    # the new permutation is a fresh input to the SAME compiled step
+    perm_arr = jnp.asarray(placement if placed else np.arange(E),
+                           jnp.int32)
 
     fs = "data" if fsdp else None
     w_spec = P("model", None, fs)
@@ -178,10 +285,15 @@ def apply_moe_ep(params, x, cfg: ModelConfig, *,
                         else P(fs, None)
                         for k in params["shared"]}
 
-    def body(router, wg, wu, wd, shared, xb):
+    def body(router, wg, wu, wd, shared, xb, perm):
         # xb: (B/dp, S/tp, d) — this device's tokens
         xf = xb.reshape(-1, d)
         gates, idx, probs, logits = route({"router": router}, xf, m)
+        # perm: physical slot -> logical expert; inv_p: logical -> slot
+        # (distinct from local_dispatch's row inverse `inv` below). The
+        # permutes are tiny E-row takes on count vectors / bucket
+        # stacks, applied only on the placed path.
+        inv_p = jnp.argsort(perm) if placed else None
 
         cnt_rx = sel = caps_arr = None
         if ragged and overlap:
@@ -192,7 +304,9 @@ def apply_moe_ep(params, x, cfg: ModelConfig, *,
             # Same bincount local_dispatch computes → bit-identical.
             cnt = jnp.minimum(jnp.bincount(idx.reshape(-1), length=E + 1)
                               [:E], C).astype(jnp.int32)
-            cnt_rx = jax.lax.all_to_all(cnt.reshape(tp, E // tp), "model",
+            cnt_tx = jnp.take(cnt, perm, axis=0) if placed else cnt
+            cnt_rx = jax.lax.all_to_all(cnt_tx.reshape(tp, E // tp),
+                                        "model",
                                         split_axis=0, concat_axis=0)
             gmax = jax.lax.pmax(jnp.max(cnt), ("model",) + dp_axes)
             caps_arr = jnp.asarray(caps, jnp.int32)
@@ -225,8 +339,11 @@ def apply_moe_ep(params, x, cfg: ModelConfig, *,
             source-block.  Returns per-slot contributions in sorted
             order, a shape shared by every ladder rung."""
             def run(xe_):
+                xs = xe_[:, :cx]
+                if placed:          # logical bucket order -> slot order
+                    xs = jnp.take(xs, perm, axis=0)
                 xa = jax.lax.all_to_all(
-                    xe_[:, :cx].reshape(tp, E // tp, cx, d), "model",
+                    xs.reshape(tp, E // tp, cx, d), "model",
                     split_axis=0, concat_axis=0)
                 ye = _ep_expert_ffn(jnp.moveaxis(xa, 0, 1), wg, wu, wd,
                                     cnt_rx, cfg)       # (E/tp, tp, cx, d)
@@ -234,6 +351,8 @@ def apply_moe_ep(params, x, cfg: ModelConfig, *,
                 ya = jax.lax.all_to_all(jnp.moveaxis(ye, 1, 0), "model",
                                         split_axis=0, concat_axis=0)
                 ye_loc = ya.reshape(E, cx, d)
+                if placed:          # slot order -> logical bucket order
+                    ye_loc = jnp.take(ye_loc, inv_p, axis=0)
                 return ye_loc[se, jnp.clip(rank, 0, cx - 1)]   # (T*K, d)
             return run
 
@@ -246,7 +365,8 @@ def apply_moe_ep(params, x, cfg: ModelConfig, *,
                 # source device's per-expert demand before bucket data
                 # moves
                 cnt = jnp.minimum(counts, C).astype(jnp.int32)
-                cnt_rx = jax.lax.all_to_all(cnt.reshape(tp, E // tp),
+                cnt_tx = jnp.take(cnt, perm, axis=0) if placed else cnt
+                cnt_rx = jax.lax.all_to_all(cnt_tx.reshape(tp, E // tp),
                                             "model",
                                             split_axis=0, concat_axis=0)
                 # (2) workload-sized capacity: smallest ladder rung
@@ -305,6 +425,15 @@ def apply_moe_ep(params, x, cfg: ModelConfig, *,
             "dropped": dropped,
             "ep_cx": cx_used,
         }
+        if demand_view:
+            # (tp, E) per-source capped demand: the same counts the
+            # exchange ships, gathered so every host sees the global
+            # view the placement solver / per-link byte accounting use
+            dv = jnp.minimum(counts, C).astype(jnp.int32)
+            dv = jax.lax.all_gather(dv, "model")
+            if dp_axes:
+                dv = jax.lax.psum(dv, dp_axes)
+            info["ep_counts"] = dv
         return y.reshape(Bl, Sl, d), info
 
     tok3 = P(dpa, "model", None)
@@ -313,14 +442,16 @@ def apply_moe_ep(params, x, cfg: ModelConfig, *,
         "probs": tok3, "gate_in": tok3,
         "aux_loss": P(), "z_loss": P(), "dropped": P(), "ep_cx": P(),
     }
+    if demand_view:
+        info_specs["ep_counts"] = P(None, None)
     fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(None, None), w_spec, w_spec, w_spec_dn,
-                  shared_specs, tok3),
+                  shared_specs, tok3, P(None)),
         out_specs=(tok3, info_specs),
         check_rep=False)
     y, info = fn(params["router"], params["gate"], params["up"],
-                 params["down"], params.get("shared"), x)
+                 params["down"], params.get("shared"), x, perm_arr)
     T_all = B * S
     info = dict(info,
                 topk_idx=info["topk_idx"].reshape(T_all, K),

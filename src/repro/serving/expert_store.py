@@ -486,7 +486,11 @@ class ExpertStore:
         if self.watchdog is not None:
             out.update(link_gbps=self.watchdog.gbps,
                        link_latency_s=self.watchdog.latency_s,
-                       deadline_misses=self.watchdog.deadline_misses)
+                       deadline_misses=self.watchdog.deadline_misses,
+                       # per-link counter snapshot, same shape as the EP
+                       # WatchdogBank.report() — ServeMetrics.fold_links
+                       # merges either source
+                       links={self.watchdog.name: self.watchdog.report()})
         return out
 
     # -- robustness seam (DESIGN.md §10) -----------------------------------

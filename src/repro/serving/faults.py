@@ -40,6 +40,10 @@ class HostReadError(TransientFault):
     """Injected host-store read error (e.g. mmap page-in failure)."""
 
 
+class FaultParseError(ValueError):
+    """Malformed ``--faults`` spec (typed so callers can catch it)."""
+
+
 FAULT_KINDS = ("link_degrade", "transient_stall", "read_error", "corrupt_rows")
 
 # Shorthand presets so `--faults link_degrade` works without a schedule.
@@ -50,21 +54,52 @@ PRESETS = {
     "corrupt_rows": "corrupt_rows@4-7",
 }
 
+#: the default link the single-host offload path streams over — specs
+#: with no ``[src>dst]`` selector match every link, including this one
+HOST_LINK = ("host", 0)
+
 
 @dataclass(frozen=True)
 class FaultSpec:
-    """One scheduled fault: `kind` active on steps [start, stop)."""
+    """One scheduled fault: `kind` active on steps [start, stop).
+
+    ``link`` narrows a fault to one directed fabric link: a
+    (src, dst) pair where each side is a device index, ``"host"`` or
+    the wildcard ``"*"``.  ``None`` (default) hits every link — the
+    pre-topology behaviour."""
 
     kind: str
     start: int = 0
     stop: int = 1 << 30
     factor: float = 8.0  # link slowdown multiplier (link_degrade only)
+    link: Optional[Tuple] = None
 
     def active(self, step: int) -> bool:
         return self.start <= step < self.stop
 
+    def matches_link(self, pair) -> bool:
+        """Does this spec hit the directed link ``pair``?  ``None``
+        selectors are global; ``"*"`` wildcards either side."""
+        if self.link is None:
+            return True
+        if pair is None:
+            pair = HOST_LINK
+        return all(sel == "*" or sel == got
+                   for sel, got in zip(self.link, pair))
 
-_SPEC_RE = re.compile(r"(\w+)(?::x([0-9.]+))?(?:@(\d+)(?:-(\d+))?)?")
+
+_SPEC_RE = re.compile(
+    r"(\w+)(?:\[([^\]]*)\])?(?::x([0-9.]+))?(?:@(\d+)(?:-(\d+))?)?")
+_LINK_SEL_RE = re.compile(r"^(host|\*|\d+)>(host|\*|\d+)$")
+
+
+def _parse_link_selector(sel: str, item: str) -> Tuple:
+    m = _LINK_SEL_RE.match(sel.strip())
+    if m is None:
+        raise FaultParseError(
+            f"bad link selector [{sel}] in {item!r}: expected "
+            f"[SRC>DST] with SRC/DST a device index, 'host' or '*'")
+    return tuple(int(t) if t.isdigit() else t for t in m.groups())
 
 
 def parse_faults(spec) -> List[FaultSpec]:
@@ -72,11 +107,13 @@ def parse_faults(spec) -> List[FaultSpec]:
 
     Grammar (comma-separated items)::
 
-        kind[:xFACTOR][@START[-STOP]]
+        kind[SRC>DST][:xFACTOR][@START[-STOP]]
 
-    e.g. ``link_degrade:x12@8-26,transient_stall@5-7``.  A bare kind
-    with no schedule uses the preset from :data:`PRESETS`.  Already
-    parsed lists pass through unchanged.
+    e.g. ``link_degrade:x12@8-26``, ``link_degrade[0>3]:x8@20-60`` (only
+    the directed fabric link 0->3), ``transient_stall@5-7``.  A bare
+    kind with no schedule uses the preset from :data:`PRESETS`.  Already
+    parsed lists pass through unchanged.  Malformed items raise
+    :class:`FaultParseError`.
     """
     if spec is None:
         return []
@@ -99,12 +136,20 @@ def parse_faults(spec) -> List[FaultSpec]:
             item = PRESETS[item]
         m = _SPEC_RE.fullmatch(item)
         if m is None:
-            raise ValueError(f"bad fault spec item: {item!r}")
-        kind, factor, start, stop = m.groups()
+            raise FaultParseError(f"bad fault spec item: {item!r}")
+        kind, link_sel, factor, start, stop = m.groups()
         if kind not in FAULT_KINDS:
-            raise ValueError(
+            raise FaultParseError(
                 f"unknown fault kind {kind!r}; expected one of {FAULT_KINDS}"
             )
+        link = None
+        if link_sel is not None:
+            if kind in ("read_error", "corrupt_rows"):
+                raise FaultParseError(
+                    f"{item!r}: {kind} is a store fault, not a link "
+                    f"fault — link selectors apply to link_degrade / "
+                    f"transient_stall")
+            link = _parse_link_selector(link_sel, item)
         start_i = int(start) if start is not None else 0
         stop_i = int(stop) if stop is not None else (
             start_i + 1 if start is not None else 1 << 30
@@ -115,6 +160,7 @@ def parse_faults(spec) -> List[FaultSpec]:
                 start=start_i,
                 stop=stop_i,
                 factor=float(factor) if factor is not None else 8.0,
+                link=link,
             )
         )
     return specs
@@ -146,10 +192,14 @@ class FaultInjector:
     def _active(self, kind: str) -> List[FaultSpec]:
         return [s for s in self.schedule if s.kind == kind and s.active(self.step)]
 
-    def link_factor(self) -> float:
-        """Current link slowdown multiplier (1.0 = healthy)."""
+    def link_factor(self, pair=None) -> float:
+        """Current slowdown multiplier for one directed link (1.0 =
+        healthy).  ``pair`` is a (src, dst) link id; ``None`` means the
+        single-host offload link (:data:`HOST_LINK`) — unselected specs
+        hit every link, so the pre-topology behaviour is unchanged."""
         with self._lock:
-            specs = self._active("link_degrade")
+            specs = [s for s in self._active("link_degrade")
+                     if s.matches_link(pair)]
             if not specs:
                 return 1.0
             return max(s.factor for s in specs)
@@ -225,6 +275,7 @@ class LinkWatchdog:
         gbps: float,
         latency_s: float,
         *,
+        name: str = "host>0",
         margin: float = 4.0,
         floor_s: float = 5e-4,
         patience: int = 3,
@@ -232,6 +283,7 @@ class LinkWatchdog:
         calib_n: int = 4,
         window: int = 32,
     ):
+        self.name = str(name)
         self.expert_bytes = max(1, int(expert_bytes))
         self.gbps = max(float(gbps), 1e-3)
         self.latency_s = max(float(latency_s), 0.0)
@@ -246,6 +298,10 @@ class LinkWatchdog:
         self.over_streak = 0
         self.ok_streak = 0
         self.deadline_misses = 0
+        # per-link counters the serve reports surface (ServeMetrics.links)
+        self.refits = 0
+        self.refit_rejections = 0
+        self.degrade_events = 0
 
     def expected_s(self, nbytes: int) -> float:
         return self.latency_s + float(nbytes) / (self.gbps * 1e9)
@@ -289,6 +345,8 @@ class LinkWatchdog:
             self.deadline_misses += 1
             self.over_streak += 1
             self.ok_streak = 0
+            if self.over_streak == self.patience:
+                self.degrade_events += 1
         else:
             self.ok_streak += 1
             self.over_streak = 0
@@ -311,11 +369,28 @@ class LinkWatchdog:
         healthy link; the refit describes the link as it is now, for
         building the degraded DaliConfig.
         """
+        self.refits += 1
         if not self._samples:
+            self.refit_rejections += 1
             return self.gbps, self.latency_s, True
         sizes, times = self._recent()
         gbps, lat, rejected = fit_link_constants(sizes, times)
+        if rejected:
+            self.refit_rejections += 1
         return max(gbps, 1e-3), max(lat, 0.0), rejected
+
+    def report(self) -> dict:
+        """Numeric per-link view for ServeMetrics / server reports."""
+        return {
+            "name": self.name,
+            "gbps": self.gbps,
+            "latency_s": self.latency_s,
+            "deadline_misses": self.deadline_misses,
+            "refits": self.refits,
+            "refit_rejections": self.refit_rejections,
+            "degrade_events": self.degrade_events,
+            "degraded": self.degraded,
+        }
 
 
 # Ladder states.
@@ -376,3 +451,103 @@ class DegradationLadder:
         if first_down is None or last_up is None:
             return None
         return max(0, last_up - first_down)
+
+
+class WatchdogBank:
+    """One :class:`LinkWatchdog` + :class:`DegradationLadder` per ordered
+    fabric pair, advanced on a shared cadence (DESIGN.md §13).
+
+    The single-host ladder reacts to ONE link; an EP fabric has
+    n·(n-1) directed links that degrade independently.  The bank keeps
+    a per-pair watchdog (budgeted from that pair's topology constants)
+    and a per-pair ladder, all driven once per step by
+    :meth:`on_step` so refit and heal decisions share the step clock —
+    a pair that degrades re-routes immediately while the rest keep
+    their healthy baselines.
+    """
+
+    def __init__(self, nbytes_hint: int, topology, *,
+                 margin: float = 4.0, floor_s: float = 0.0,
+                 patience: int = 3, recover_patience: int = 3,
+                 calib_n: int = 4, window: int = 32,
+                 little_after: int = 1 << 30,
+                 enable_little: bool = False):
+        # floor_s defaults to 0 here (unlike the host watchdog's 5e-4):
+        # modeled fabric pair times are µs-scale, so the only meaningful
+        # floor is the observed median each pair calibrates for itself
+        self.topology = topology
+        self.watchdogs: Dict[Tuple[int, int], LinkWatchdog] = {}
+        self.ladders: Dict[Tuple[int, int], DegradationLadder] = {}
+        for (i, j) in topology.pairs():
+            gbps, lat = topology.pair(i, j)
+            wd = LinkWatchdog(
+                nbytes_hint, gbps, lat, name=f"{i}>{j}", margin=margin,
+                floor_s=floor_s, patience=patience,
+                recover_patience=recover_patience, calib_n=calib_n,
+                window=window)
+            self.watchdogs[(i, j)] = wd
+            # the EP re-route ladder has no little tier by default: the
+            # reaction to a bad fabric link is placement, not int8 twins
+            self.ladders[(i, j)] = DegradationLadder(
+                wd, little_after=little_after,
+                enable_little=enable_little)
+
+    def observe(self, pair, nbytes, seconds) -> bool:
+        """Record one directed transfer timing; True on a deadline miss."""
+        return self.watchdogs[tuple(pair)].observe(nbytes, seconds)
+
+    def on_step(self, step: int) -> List[Tuple[Tuple[int, int], str, str]]:
+        """Advance every pair's ladder once; returns the transitions
+        [(pair, from, to), ...] that fired this step."""
+        out = []
+        for pair, ladder in self.ladders.items():
+            tr = ladder.on_step(step)
+            if tr is not None:
+                out.append((pair, tr[0], tr[1]))
+        return out
+
+    def state(self, pair) -> str:
+        return self.ladders[tuple(pair)].state
+
+    def degraded_pairs(self) -> List[Tuple[int, int]]:
+        return [p for p, lad in self.ladders.items()
+                if lad.state != HEALTHY]
+
+    def refit_topology(self, base=None):
+        """The fabric as it is NOW: non-healthy pairs get their online
+        refit constants (honest degraded t_trans for the placement
+        re-solve), healthy pairs keep the base topology's."""
+        topo = (base if base is not None else self.topology).copy()
+        for pair in self.degraded_pairs():
+            wd = self.watchdogs[pair]
+            gbps, lat, rejected = wd.refit()
+            if rejected:
+                # fixed-size probe windows carry no per-byte slope, so
+                # the lstsq refit degenerates to ~the healthy median
+                # (the window is mostly pre-fault samples).  Charge the
+                # OBSERVED slowdown instead: the median of the samples
+                # that tripped the ladder over the healthy expectation.
+                sizes, times = wd._recent()
+                k = float(np.median(times[-wd.patience:])
+                          / max(wd.expected_s(sizes[-1]), 1e-12))
+                topo = topo.degrade(pair[0], pair[1], max(k, 1.0))
+                topo.rejected[pair[0], pair[1]] = True
+            else:
+                topo = topo.with_pair(pair[0], pair[1], gbps, lat)
+        return topo
+
+    def report(self) -> Dict[str, dict]:
+        """Per-link counter reports keyed by link name ("0>3")."""
+        out = {}
+        for pair, wd in self.watchdogs.items():
+            rep = wd.report()
+            rep["state"] = self.ladders[pair].state
+            out[wd.name] = rep
+        return out
+
+    def transitions(self) -> List[Tuple[Tuple[int, int], int, str, str]]:
+        """All (pair, step, from, to) transitions, time-ordered."""
+        out = []
+        for pair, lad in self.ladders.items():
+            out.extend((pair, s, frm, to) for s, frm, to in lad.transitions)
+        return sorted(out, key=lambda r: r[1])

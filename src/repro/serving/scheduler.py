@@ -138,6 +138,10 @@ class ServeMetrics:
     # lock and each delta lands in exactly one fold, so per-request
     # rates derived here cannot double- or under-count
     offload_tel: dict = field(default_factory=dict)
+    # per-link watchdog counter snapshots keyed by link name ("host>0",
+    # "0>3", ...) — monotonic totals from LinkWatchdog.report() /
+    # WatchdogBank.report(), so the LATEST snapshot per link wins
+    links: dict = field(default_factory=dict)
     dali: TelemetryAggregator = field(default_factory=TelemetryAggregator)
 
     def fold_offload(self, deltas: Optional[dict]):
@@ -145,6 +149,15 @@ class ServeMetrics:
             return
         for k, v in deltas.items():
             self.offload_tel[k] = self.offload_tel.get(k, 0) + v
+
+    def fold_links(self, links: Optional[dict]):
+        """Merge per-link watchdog reports (ExpertStore.health()['links']
+        or an EP WatchdogBank.report()).  Reports are cumulative counter
+        snapshots, not deltas, so merging replaces per link."""
+        if not links:
+            return
+        for name, rep in links.items():
+            self.links[name] = dict(rep)
 
     def fallback_rate(self) -> float:
         """Miss-fallback (token, k) rows per finished request — the
@@ -190,6 +203,15 @@ class ServeMetrics:
                       if ot.get(k)]
             if extras:
                 s += " " + " ".join(f"{k}={v}" for k, v in extras)
+        hot = [(n, r) for n, r in sorted(self.links.items())
+               if r.get("refit_rejections") or r.get("degrade_events")
+               or r.get("deadline_misses")]
+        if hot:
+            s += " | links " + " ".join(
+                f"{n}[miss={r.get('deadline_misses', 0)}"
+                f" refit={r.get('refits', 0)}"
+                f"/rej={r.get('refit_rejections', 0)}"
+                f" degr={r.get('degrade_events', 0)}]" for n, r in hot)
         return s
 
 
@@ -400,6 +422,7 @@ class ContinuousBatchServer:
         self.metrics.dali.end_epoch()
         if self.store is not None:
             self.metrics.fold_offload(self.store.drain())
+            self.metrics.fold_links(self.store.health().get("links"))
         self.metrics.requests += len(finished)
         return finished
 
@@ -558,6 +581,7 @@ class BatchServer:
         self.metrics.dali.end_epoch()
         if self.store is not None:
             self.metrics.fold_offload(self.store.drain())
+            self.metrics.fold_links(self.store.health().get("links"))
         self.metrics.waves += 1
         self.metrics.requests += len(wave)
         for r in wave:

@@ -111,8 +111,14 @@ class OffloadSpec:
                     layer sweep stages (DESIGN.md §11; None = pool size)
     strip_params  — remove the on-device expert stacks from the served
                     params (None = auto: stripped for physical modes)
-    faults        — fault-injection schedule (serving/faults.py)
+    faults        — fault-injection schedule (serving/faults.py); the
+                    grammar takes an optional link selector,
+                    ``link_degrade[0>3]:x8@6-18`` (DESIGN.md §13)
     cost_model    — link constants for the watchdog (None = LOCAL_PC)
+    topology      — per-link fabric spec (core/cost_model.parse_topology:
+                    "flat", "island:K", "SRC>DST:xF" overrides, or a
+                    LinkTopology) attached to the cost model so per-link
+                    watchdogs and EP placement price each pair honestly
     """
     mode: str = "modeled"
     fallback: str = "fetch"
@@ -120,6 +126,7 @@ class OffloadSpec:
     strip_params: Optional[bool] = None
     faults: Any = None
     cost_model: Any = None
+    topology: Any = None
 
     @property
     def physical(self) -> bool:
@@ -176,7 +183,8 @@ class ServeSpec:
             store = build_store(off.mode, params, self.cfg, policy,
                                 fallback=off.fallback, faults=off.faults,
                                 cost_model=off.cost_model,
-                                prefill_rows=off.prefill_rows)
+                                prefill_rows=off.prefill_rows,
+                                topology=off.topology)
         use_params = params
         if store is not None and off.strip_params is not False:
             from repro.serving.expert_store import strip_expert_params
@@ -186,7 +194,8 @@ class ServeSpec:
 
 
 def build_store(offload: str, params, cfg, policy, fallback: str = "fetch",
-                faults=None, cost_model=None, prefill_rows=None):
+                faults=None, cost_model=None, prefill_rows=None,
+                topology=None):
     """Build the ExpertStore for a physical offload mode (None for
     "modeled") — the store-sizing logic ``scheduler.make_store`` used to
     own.  The pool is sized to the policy's maximum effective resident
@@ -203,6 +212,15 @@ def build_store(offload: str, params, cfg, policy, fallback: str = "fetch",
                              'into')
         return None
     require_offload_policy(policy, cfg)
+    if topology is not None:
+        # attach the per-link fabric to the store's cost model so its
+        # watchdog (and anything reading CostModel.for_link) prices each
+        # directed pair, not one homogeneous link (DESIGN.md §13)
+        import jax
+        from repro.core.cost_model import CostModel, parse_topology
+        cm = cost_model if cost_model is not None else CostModel.for_config(cfg)
+        cost_model = cm.with_topology(
+            parse_topology(topology, len(jax.devices())))
     dcfg = policy.dcfg
     moves = max(2, dcfg.prefetch_size + dcfg.u_size)
     # pool = max effective resident set (cache ∪ prefetch) + one plan of

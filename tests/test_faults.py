@@ -453,3 +453,133 @@ def test_server_transient_faults_identical_outputs(model):
         if faults:
             assert srv.metrics.offload_tel.get("stalls", 0) > 0
     assert outs[None] == outs["transient_stall@2-4"]
+
+
+# -- per-link faults + watchdog bank (DESIGN.md §13) -----------------------
+
+def test_parse_faults_link_selector():
+    from repro.serving.faults import HOST_LINK, FaultParseError
+    (s,) = parse_faults("link_degrade[0>3]:x8@20-60")
+    assert s == FaultSpec("link_degrade", 20, 60, 8.0, link=(0, 3))
+    (s,) = parse_faults("link_degrade[host>*]:x4")
+    assert s.link == ("host", "*")
+    (s,) = parse_faults("transient_stall[*>2]@5")
+    assert s.link == ("*", 2) and (s.start, s.stop) == (5, 6)
+    # selector matching: directed, wildcarded, host-defaulted
+    s = FaultSpec("link_degrade", link=(0, 3))
+    assert s.matches_link((0, 3)) and not s.matches_link((3, 0))
+    assert not s.matches_link(None)
+    h = FaultSpec("link_degrade", link=("host", "*"))
+    assert h.matches_link(None) and h.matches_link(HOST_LINK)
+    assert not h.matches_link((0, 3))
+    assert FaultSpec("link_degrade").matches_link((5, 6))   # no selector
+    for bad in ("link_degrade[0-3]:x8", "link_degrade[0>]:x8",
+                "link_degrade[a>b]:x8", "read_error[0>3]@5",
+                "corrupt_rows[host>0]"):
+        with pytest.raises(FaultParseError):
+            parse_faults(bad)
+    # FaultParseError is a ValueError: legacy handlers still catch it
+    assert issubclass(FaultParseError, ValueError)
+
+
+def test_injector_link_factor_per_pair():
+    inj = FaultInjector("link_degrade[0>3]:x8@0-5")
+    inj.tick()
+    assert inj.link_factor((0, 3)) == 8.0
+    assert inj.link_factor((3, 0)) == 1.0      # directed
+    assert inj.link_factor() == 1.0            # host link unselected
+    # an unselected spec still hits every link (pre-topology behaviour)
+    inj = FaultInjector("link_degrade:x4@0-5")
+    inj.tick()
+    assert inj.link_factor((0, 3)) == 4.0
+    assert inj.link_factor() == 4.0
+
+
+def test_overlapping_link_windows_take_max():
+    inj = FaultInjector("link_degrade[0>3]:x4@0-10,link_degrade[0>3]:x8@3-6")
+    factors = []
+    for _ in range(10):
+        inj.tick()
+        factors.append(inj.link_factor((0, 3)))
+    # steps 0-2: only x4; 3-5: overlap -> max wins; 6-9: x4 again
+    # (the first tick lands on step 0)
+    assert factors == [4.0, 4.0, 4.0, 8.0, 8.0, 8.0, 4.0, 4.0, 4.0, 4.0]
+
+
+def test_fire_once_under_multiple_specs():
+    inj = FaultInjector("transient_stall@1-3,transient_stall@2-4")
+    fired = []
+    for step in range(1, 5):
+        inj.tick()
+        n = 0
+        for _ in range(4):      # each call fires at most one NEW spec
+            try:
+                inj.maybe_stall()
+            except Exception:
+                n += 1
+        fired.append(n)
+    # ticks land on steps 0..3: step 0 has no active spec, step 1 one,
+    # step 2 both (each fires once), step 3 one
+    assert fired == [0, 1, 2, 1]
+
+
+def test_watchdog_counters_and_report():
+    wd = LinkWatchdog(1 << 20, 10.0, 1e-4, name="0>3", margin=2.0,
+                      patience=2, calib_n=2, floor_s=0.0)
+    good = wd.expected_s(1 << 20)
+    for _ in range(4):
+        wd.observe(1 << 20, good)
+    assert wd.degrade_events == 0
+    for _ in range(3):
+        wd.observe(1 << 20, 50 * good)
+    rep = wd.report()
+    assert rep["name"] == "0>3"
+    assert rep["degrade_events"] == 1          # counted at the streak edge
+    assert rep["deadline_misses"] == 3
+    n_refits = wd.refits
+    wd.refit()
+    assert wd.refits == n_refits + 1
+    assert wd.report()["refits"] == wd.refits
+
+
+def test_watchdog_bank_degrade_heal_refit():
+    from repro.core.cost_model import LinkTopology
+    from repro.serving.faults import WatchdogBank
+    topo = LinkTopology.homogeneous(4, 10.0, 1e-4)
+    bank = WatchdogBank(1 << 20, topo, margin=2.0, patience=2,
+                        recover_patience=2, calib_n=2)
+    assert len(bank.watchdogs) == 4 * 3
+    nb = 1 << 20
+    states = []
+    for step in range(14):
+        for (i, j) in topo.pairs():
+            t = topo.pair_time(i, j, nb)
+            if (i, j) == (0, 3) and 4 <= step < 9:
+                t *= 16                        # injected slow link
+            bank.observe((i, j), nb, t)
+        bank.on_step(step)
+        states.append(bank.state((0, 3)))
+    assert DEGRADED in states                  # tripped during the fault
+    assert states[-1] == HEALTHY               # healed after it cleared
+    assert bank.degraded_pairs() == []
+    # every other pair stayed healthy the whole time
+    assert all(bank.state(p) == HEALTHY
+               for p in topo.pairs() if p != (0, 3))
+    # while degraded, refit_topology charges the measured constants
+    di = states.index(DEGRADED)
+    bank2 = WatchdogBank(1 << 20, topo, margin=2.0, patience=2,
+                         recover_patience=2, calib_n=2)
+    for step in range(di + 1):
+        for (i, j) in topo.pairs():
+            t = topo.pair_time(i, j, nb)
+            if (i, j) == (0, 3) and step >= 4:
+                t *= 16
+            bank2.observe((i, j), nb, t)
+        bank2.on_step(step)
+    assert bank2.state((0, 3)) == DEGRADED
+    now = bank2.refit_topology(topo)
+    assert now.pair_time(0, 3, nb) > 2 * topo.pair_time(0, 3, nb)
+    assert now.pair(1, 2) == topo.pair(1, 2)   # healthy pairs keep base
+    rep = bank2.report()
+    assert rep["0>3"]["state"] == DEGRADED and rep["0>3"]["degrade_events"]
+    assert rep["1>2"]["state"] == HEALTHY

@@ -1,0 +1,119 @@
+"""Per-link cost topology (core/cost_model.py, DESIGN.md §13):
+
+(a) constructors: homogeneous and hierarchical island fabrics, with the
+    island size validated;
+(b) the ``--topology`` grammar: bases, per-pair overrides, bare override
+    lists, and typed TopologyParseError on malformed specs;
+(c) per-pair timing (Eq. 6 per link), directed degradation, and the
+    device-quality ranking the greedy placement consumes;
+(d) guarded per-pair refits: degenerate fits keep the prior constants
+    and are recorded in ``rejected`` (never baked into nonsense);
+(e) CostModel integration: ``with_topology`` + ``for_link`` give each
+    directed pair its own trans_time.
+"""
+import numpy as np
+import pytest
+
+from repro.core.cost_model import (LOCAL_PC, CostModel, LinkTopology,
+                                   TopologyParseError, calibrate_links,
+                                   fit_topology, parse_topology)
+
+
+def test_homogeneous_uniform():
+    t = LinkTopology.homogeneous(4, 8.0, 1e-5)
+    assert t.n == 4
+    assert t.pair(0, 3) == (8.0, 1e-5)
+    assert t.is_uniform()
+    assert len(t.pairs()) == 4 * 3
+    assert all(i != j for i, j in t.pairs())
+
+
+def test_hierarchical_islands():
+    t = LinkTopology.hierarchical(8, 4, intra_gbps=64.0, inter_gbps=8.0,
+                                  intra_latency_s=1e-6,
+                                  inter_latency_s=1e-5)
+    assert t.pair(0, 3) == (64.0, 1e-6)       # same island
+    assert t.pair(0, 4) == (8.0, 1e-5)        # across islands
+    assert t.is_uniform()                     # islands are symmetric
+    with pytest.raises(TopologyParseError):
+        LinkTopology.hierarchical(8, 3, intra_gbps=1, inter_gbps=1,
+                                  intra_latency_s=0, inter_latency_s=0)
+
+
+def test_pair_time_and_degrade():
+    t = LinkTopology.homogeneous(4, 10.0, 1e-4)
+    assert t.pair_time(1, 1, 1 << 20) == 0.0
+    expect = 1e-4 + (1 << 20) / (10.0 * 1e9)
+    assert t.pair_time(0, 1, 1 << 20) == pytest.approx(expect)
+    d = t.degrade(0, 1, 8.0)
+    assert d.pair(0, 1) == (10.0 / 8, 8e-4)
+    assert d.pair(1, 0) == (10.0, 1e-4)       # directed: reverse untouched
+    assert t.pair(0, 1) == (10.0, 1e-4)       # original is unchanged
+    assert not d.is_uniform()
+    q = d.device_quality()
+    # the degraded link drags BOTH endpoints' quality below the others'
+    assert q[0] < q[2] and q[1] < q[2]
+
+
+def test_parse_topology_grammar():
+    t = parse_topology(None, 4)
+    assert t.pair(0, 1) == (LOCAL_PC.link_gbps, LOCAL_PC.link_latency_s)
+    assert parse_topology(t, 4) is t          # passthrough
+    t = parse_topology("island:4", 8)
+    assert t.pair(0, 1)[0] == 8 * LOCAL_PC.link_gbps
+    assert t.pair(0, 5)[0] == LOCAL_PC.link_gbps
+    t = parse_topology("flat,0>3:x8", 8)
+    assert t.pair(0, 3)[0] == pytest.approx(LOCAL_PC.link_gbps / 8)
+    assert t.pair(3, 0)[0] == LOCAL_PC.link_gbps
+    # bare override list (no base) and absolute g/l override
+    t = parse_topology("1>2:g4.0:l250", 4)
+    assert t.pair(1, 2) == (4.0, pytest.approx(250e-6))
+
+
+@pytest.mark.parametrize("bad", [
+    "mesh", "island:x", "flat,0>0:x8", "flat,0>9:x8", "flat,0-3:x8",
+    "flat,0>3:q8", "flat,0>3", "island:3",
+])
+def test_parse_topology_malformed_typed(bad):
+    with pytest.raises(TopologyParseError):
+        parse_topology(bad, 8)
+
+
+def test_fit_topology_good_and_degenerate():
+    prior = LinkTopology.homogeneous(3, 10.0, 1e-4)
+    sizes = np.array([1e6, 4e6, 16e6])
+    good = 2e-4 + sizes / (5.0 * 1e9)         # clean 5 GB/s, 200 µs
+    noisy = np.array([3e-3, 2e-3, 1e-3])      # bigger buffer "faster"
+    t = fit_topology(prior, {(0, 1): (sizes, good),
+                             (1, 2): (sizes, noisy)})
+    assert t.pair(0, 1)[0] == pytest.approx(5.0, rel=1e-3)
+    assert t.pair(0, 1)[1] == pytest.approx(2e-4, rel=1e-3)
+    assert not t.rejected[0, 1]
+    # the degenerate fit keeps the PRIOR constants and is recorded
+    assert t.pair(1, 2) == prior.pair(1, 2)
+    assert t.rejected[1, 2]
+    # unmeasured pairs keep the prior untouched
+    assert t.pair(2, 0) == prior.pair(2, 0) and not t.rejected[2, 0]
+
+
+def test_calibrate_links_single_device_returns_prior():
+    prior = LinkTopology.homogeneous(1, 10.0, 1e-4)
+    import jax
+    t = calibrate_links(prior, devices=jax.devices()[:1])
+    assert t is not prior
+    assert np.array_equal(t.gbps, prior.gbps)
+
+
+def test_cost_model_per_link():
+    from repro.configs import get_config, make_smoke
+    cfg = make_smoke(get_config("mixtral-8x7b"))
+    topo = parse_topology("flat,0>3:x8", 4)
+    cm = CostModel.for_config(cfg).with_topology(topo)
+    assert cm.trans_time_for(0, 3) == pytest.approx(
+        8 * cm.trans_time_for(1, 2), rel=0.2)
+    slow = cm.for_link(0, 3)
+    fast = cm.for_link(1, 2)
+    assert slow.trans_time > fast.trans_time
+    # without a topology, every link is the homogeneous trans_time
+    base = CostModel.for_config(cfg)
+    assert base.trans_time_for(0, 3) == base.trans_time
